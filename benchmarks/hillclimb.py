@@ -1,0 +1,162 @@
+"""Perf hillclimb driver: named variants per cell, measured via the
+roofline dry-run (2-point extrapolated HLO terms), logged for §Perf.
+
+Each variant is (rules overrides, runtime overrides, train-config
+overrides); the driver lowers+compiles the cell per variant and records the
+three roofline terms so EXPERIMENTS.md §Perf can show
+hypothesis -> change -> before -> after.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --cell qwen2.5-32b:train_4k --variants baseline,remat_dots
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+from repro.launch.dryrun import run_cell_roofline  # noqa: E402  (after flags)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train.sharding import ShardingRules  # noqa: E402
+
+# variant name -> dict(rules=..., rt=..., tc=...)
+VARIANTS = {
+    "baseline": {},
+    # Hypothesis: 'dots' remat keeps matmul outputs, so backward does not
+    # re-run the forward matmuls -> no second FSDP param all-gather and
+    # ~25% fewer flops; costs activation memory.
+    "remat_dots": {"rt": {"remat": "dots"}},
+    # Hypothesis: no remat at all (roofline-mode graphs are micro=1);
+    # removes the recompute flops AND its collectives entirely.
+    "remat_none": {"rt": {"remat": "none"}},
+    # Hypothesis: 2D activation sharding (embed dim on tp axis) converts the
+    # big fwd/bwd activation all-reduces into reduce-scatter + all-gather
+    # halves the activation wire bytes on the tp axis.
+    "act2d": {"rules": {"shard_activations_embed": True}},
+    "act2d_remat_none": {"rules": {"shard_activations_embed": True},
+                         "rt": {"remat": "none"}},
+    # Hypothesis: FSDP off (pure TP + DP): params replicated across data
+    # axis -> no per-layer param all-gather, but optimizer state no longer
+    # fits for big models; useful to isolate the FSDP share of wire bytes.
+    "no_fsdp": {"rules": {"fsdp_axis": None}},
+    # Hypothesis: expert-parallelism off for MoE (experts sharded over tp
+    # d_ff instead of data) -> removes all-to-all, adds gather traffic.
+    "moe_no_ep": {"rules": {"expert_axis": None}},
+    # Serving: batch over BOTH data and model axes for decode (cache rows
+    # split 256-way instead of 16) -> smaller per-device cache reads.
+    "decode_batch2d": {"rules": {"batch_axes": ("pod", "data", "model"),
+                                 "tp_axis": None}},
+    # Hypothesis: qwen's 40 heads don't divide the 16-way tp axis; GSPMD
+    # invents padded/head_dim shardings and re-shards the (B,S,H,dh)
+    # tensors at every attention op.  Pinning q/k/v to explicitly
+    # REPLICATED heads (when H % tp != 0) trades one small qkv all-gather
+    # for the pathological resharding.
+    "heads_explicit": {"rt": {"constrain_attn_heads": True}},
+    "heads_explicit_remat_none": {"rt": {"constrain_attn_heads": True,
+                                         "remat": "none"}},
+    "heads_act2d": {"rt": {"constrain_attn_heads": True},
+                    "rules": {"shard_activations_embed": True}},
+    "heads_remat_dots": {"rt": {"constrain_attn_heads": True,
+                                "remat": "dots"}},
+    # Hypothesis: context parallelism — shard the attention SEQUENCE dim
+    # over tp.  Score/PV work stays 1/tp per device for ANY head count and
+    # only the (GQA-small) K/V is all-gathered.
+    "attn_seqpar": {"rt": {"constrain_attn_heads": True},
+                    "rules": {"attn_shard_mode": "seq"}},
+    "attn_seqpar_act2d": {"rt": {"constrain_attn_heads": True},
+                          "rules": {"attn_shard_mode": "seq",
+                                    "shard_activations_embed": True}},
+    "seqpar_remat_dots": {"rt": {"constrain_attn_heads": True,
+                                 "remat": "dots"},
+                          "rules": {"attn_shard_mode": "seq"}},
+    "seqpar_dots_nofsdp": {"rt": {"constrain_attn_heads": True,
+                                  "remat": "dots"},
+                           "rules": {"attn_shard_mode": "seq",
+                                     "fsdp_axis": None}},
+    # Hypothesis: pure FSDP / ZeRO-3 over BOTH mesh axes (no TP at all):
+    # the per-layer activation all-reduces disappear entirely; the only
+    # wire traffic is the param all-gather (~2 x params bytes / device)
+    # + grad reduce-scatter, which at 4k tokens/device is ~10x less than
+    # the TP activation ARs.  Batch shards 256-way (1 row/device).
+    "pure_fsdp": {"rules": {"tp_axis": None,
+                            "fsdp_axis": ("data", "model"),
+                            "batch_axes": ("pod", "data", "model")},
+                  "rt": {"constrain_attn_heads": False}},
+    "pure_fsdp_dots": {"rules": {"tp_axis": None,
+                                 "fsdp_axis": ("data", "model"),
+                                 "batch_axes": ("pod", "data", "model")},
+                       "rt": {"remat": "dots"}},
+    # Hypothesis: the new expert-major constraint turns the MoE expert
+    # einsums' replicate+all-reduce into all-to-all dispatch (true EP).
+    # ("ep_layout" is the post-fix baseline; combine with dots remat.)
+    "ep_layout": {"rules": {"moe_layout": "expert_major"}},
+    "ep_layout_dots": {"rules": {"moe_layout": "expert_major"},
+                       "rt": {"remat": "dots"}},
+    # Hypothesis: grid layout (tokens over tp x experts over data) makes
+    # both expert einsums communication-free; only the small token
+    # reshards at the MoE boundary remain.
+    "moe_grid": {"rules": {"moe_layout": "grid"}},
+    "moe_grid_dots": {"rules": {"moe_layout": "grid"},
+                      "rt": {"remat": "dots"}},
+    # Hypothesis: shard_map MoE with EXPLICIT lax.all_to_all dispatch —
+    # the communication GSPMD refuses to emit.  Expected: expert-einsum
+    # all-reduces (17 GiB/layer) replaced by ~150 MiB all-to-alls.
+    "moe_shardmap": {"rt": {"moe_impl": "shard_map"}},
+    "moe_shardmap_dots": {"rt": {"moe_impl": "shard_map",
+                                 "remat": "dots"}},
+    # Hypothesis: compose the two confirmed wins — ZeRO-3 for the dense
+    # residual/attention parts (kills their TP all-reduces) + explicit
+    # all_to_all expert parallelism for the MoE.
+    "moe_shardmap_purefsdp_dots": {
+        "rules": {"tp_axis": None, "fsdp_axis": ("data", "model"),
+                  "batch_axes": ("pod", "data", "model")},
+        "rt": {"moe_impl": "shard_map", "remat": "dots"}},
+    "moe_shardmap_seqpar_dots": {
+        "rules": {"attn_shard_mode": "seq"},
+        "rt": {"moe_impl": "shard_map", "remat": "dots",
+               "constrain_attn_heads": True}},
+}
+
+
+def run_variant(arch, shape, variant, out_dir):
+    spec = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=False)
+    rules = ShardingRules(mesh, **spec.get("rules", {}))
+    rec = run_cell_roofline(arch, shape, mesh, rules=rules,
+                            rt_overrides=spec.get("rt"))
+    rec["variant"] = variant
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    for variant in args.variants.split(","):
+        t0 = time.time()
+        rec = run_variant(arch, shape, variant, args.out)
+        if rec["status"] != "ok":
+            print(f"{variant}: {rec['status']} {rec.get('error', '')[:160]}")
+            continue
+        t = rec["roofline"]
+        print(f"{variant}: compute={t['compute_s']:.3f}s "
+              f"memory={t['memory_s']:.3f}s "
+              f"memory_model={t['memory_model_s']:.3f}s "
+              f"coll={t['collective_s']:.3f}s "
+              f"frac={rec['roofline_fraction']:.3f} "
+              f"frac_model={rec['roofline_fraction_model']:.3f} "
+              f"[{time.time()-t0:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

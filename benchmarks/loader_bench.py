@@ -1,0 +1,50 @@
+"""Loader throughput: platform snapshot -> training batches (tokens/s)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import DatasetManager, MemoryBackend, ObjectStore, Record
+from repro.core.transforms import Pipeline, RunContext
+from repro.data import PackComponent, ShardedSnapshotLoader, TokenizeComponent
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    docs = [Record(f"d{i:04d}", b"some training text " * 64, {})
+            for i in range(512)]
+    dm.check_in("raw", docs, actor="b")
+    snap_in = dm.checkout("raw", actor="b", register_snapshot=False)
+    pipe = Pipeline([TokenizeComponent(), PackComponent(seq_len=512)])
+    packed = pipe.run(list(snap_in), RunContext())
+    dm.check_in("packed", packed, actor="b")
+    snap = dm.checkout("packed", actor="b", register_snapshot=False)
+
+    for batch, seq in [(8, 512), (32, 512)]:
+        loader = ShardedSnapshotLoader(snap, batch, seq)
+        loader.next_batch()  # warmup
+        t0 = time.perf_counter()
+        n = 8
+        for _ in range(n):
+            loader.next_batch()
+        dt = time.perf_counter() - t0
+        us = dt / n * 1e6
+        toks = batch * seq
+        rows.append((f"loader_b{batch}_s{seq}", us,
+                     f"{toks / (dt / n) / 1e6:.1f}Mtok/s"))
+
+    # prefetched iterator
+    loader = ShardedSnapshotLoader(snap, 8, 512, prefetch=4)
+    it = iter(loader)
+    next(it)
+    t0 = time.perf_counter()
+    for _ in range(8):
+        next(it)
+    dt = (time.perf_counter() - t0) / 8
+    rows.append(("loader_prefetch_b8_s512", dt * 1e6,
+                 f"{8 * 512 / dt / 1e6:.1f}Mtok/s"))
+    return rows

@@ -1,0 +1,135 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts
+written by ``repro.launch.dryrun``.
+
+Usage:
+    python -m benchmarks.roofline --artifacts artifacts/dryrun \
+        [--write-experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["qwen2.5-32b", "stablelm-1.6b", "gemma3-12b", "gemma2-9b",
+              "arctic-480b", "mixtral-8x22b", "seamless-m4t-medium",
+              "recurrentgemma-9b", "mamba2-1.3b", "internvl2-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(artifacts: str) -> Dict[str, dict]:
+    out = {}
+    for path in glob.glob(os.path.join(artifacts, "*.json")):
+        rec = json.load(open(path))
+        key = (rec["arch"], rec["shape"], rec["mesh"],
+               "roofline" if path.endswith("__roofline.json") else "exec")
+        out[key] = rec
+    return out
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs) -> List[str]:
+    lines = ["| arch | shape | 16x16 | 2x16x16 | peak mem/dev | microb | opt |",
+             "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r1 = recs.get((arch, shape, "16x16", "exec"))
+            r2 = recs.get((arch, shape, "2x16x16", "exec"))
+            if r1 is None and r2 is None:
+                continue
+            r = r1 or r2
+
+            def st(x):
+                if x is None:
+                    return "-"
+                if x["status"] == "skipped":
+                    return "skip"
+                if x["status"] == "ok":
+                    return f"ok ({x.get('compile_s', 0):.0f}s)"
+                return "ERROR"
+
+            mem = (r1 or {}).get("memory", {})
+            peak = mem.get("peak_estimate_bytes")
+            peak_s = f"{peak / 2**30:.1f}GiB" if peak else "-"
+            lines.append(
+                f"| {arch} | {shape} | {st(r1)} | {st(r2)} | {peak_s} | "
+                f"{r.get('microbatches', '-')} | {r.get('optimizer', '-')} |")
+    return lines
+
+
+def roofline_table(recs) -> List[str]:
+    lines = [
+        "| arch | shape | compute | memory(HLO) | memory(model) | collective "
+        "| dominant | MODEL_FLOPs/dev | useful ratio | roofline frac "
+        "(HLO / model) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "16x16", "roofline"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | | |")
+                continue
+            t = r["roofline"]
+            dom = f"{t['dominant']} / {t.get('dominant_model', '?')}"
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(t['compute_s'])} | "
+                f"{_fmt_s(t['memory_s'])} | {_fmt_s(t.get('memory_model_s'))} | "
+                f"{_fmt_s(t['collective_s'])} | {dom} | "
+                f"{r.get('model_flops_per_device', 0) / 1e12:.2f}T | "
+                f"{r.get('useful_flops_ratio', 0):.2f} | "
+                f"{r.get('roofline_fraction', 0):.3f} / "
+                f"{r.get('roofline_fraction_model', 0):.3f} |")
+    return lines
+
+
+def pick_hillclimb(recs) -> List[str]:
+    """Worst roofline fraction, most collective-bound, most paper-
+    representative (the biggest data-pipeline consumer = train cell of the
+    largest model)."""
+    ok = [r for (a, s, m, k), r in recs.items()
+          if k == "roofline" and m == "16x16" and r.get("status") == "ok"]
+    notes = []
+    worst = min(ok, key=lambda r: r.get("roofline_fraction_model", 1.0))
+    notes.append(f"worst-roofline: {worst['arch']} x {worst['shape']} "
+                 f"(frac_model={worst.get('roofline_fraction_model'):.3f})")
+    coll = max(ok, key=lambda r: (r["roofline"]["collective_s"]
+                                  / max(r["roofline"]["bound_model_s"],
+                                        1e-12)))
+    notes.append(f"most-collective-bound: {coll['arch']} x {coll['shape']} "
+                 f"(coll={coll['roofline']['collective_s']:.3f}s)")
+    return notes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.artifacts)
+    print("## Dry-run table\n")
+    print("\n".join(dryrun_table(recs)))
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print("\n".join(roofline_table(recs)))
+    print("\n## Hillclimb candidates\n")
+    print("\n".join(pick_hillclimb(recs)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+# One function per paper feature / reproduction table.
+# Prints ``name,us_per_call,derived`` CSV.
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = []
+    from . import kernel_bench, loader_bench, platform_bench, train_bench
+
+    sections = [
+        ("platform", platform_bench.run),
+        ("loader", loader_bench.run),
+        ("kernels", kernel_bench.run),
+        ("train", train_bench.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for section, fn in sections:
+        try:
+            for name, us, derived in fn():
+                print(f"{section}/{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{section}/ERROR,0,{traceback.format_exc(limit=2)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end smoke-scale training/serving step timings on local devices.
+
+Gives CPU-host wall times for the jitted train/decode steps of each family
+representative (production timings are TPU; these catch regressions and
+show the step functions are real and jittable end-to-end).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import RuntimeConfig, build_model
+from repro.train import TrainConfig, make_train_step
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+FAMS = ["qwen2.5-32b", "mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-9b",
+        "seamless-m4t-medium"]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    rt = RuntimeConfig(compute_dtype=jnp.float32, attn_impl="naive",
+                       ssd_impl="xla", rglru_impl="xla", max_cache_len=64,
+                       moe_group_size=32)
+    B, S = 4, 64
+    for arch in FAMS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg, rt)
+        params = model.init(jax.random.PRNGKey(0))
+        tc = TrainConfig(optimizer=OptimizerConfig(lr=1e-3))
+        opt = make_optimizer(tc.optimizer)
+        opt_state = opt.init(params)
+        step = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        batch = {
+            "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        }
+        if cfg.is_encoder_decoder:
+            batch["frontend_embeds"] = jax.random.normal(
+                ks[2], (B, S, cfg.d_model), jnp.float32) * 0.1
+        params, opt_state, m = step(params, opt_state, batch)  # compile
+        jax.block_until_ready(m["loss"])
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            params, opt_state, m = step(params, opt_state, batch)
+            jax.block_until_ready(m["loss"])
+            times.append(time.perf_counter() - t0)
+        us = float(np.median(times)) * 1e6
+        rows.append((f"train_step_smoke_{arch}", us,
+                     f"{B * S / (us / 1e6):.0f}tok/s"))
+    return rows

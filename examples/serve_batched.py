@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a batch of prompts, decode with jitted
+steps and donated caches, across three architecture families (attention
+KV-cache, SSM state, hybrid RG-LRU + ring window).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+for arch in ["stablelm-1.6b", "mamba2-1.3b", "recurrentgemma-9b"]:
+    print(f"\n=== {arch} (smoke config) ===")
+    out = serve_mod.main(["--arch", arch, "--smoke", "--batch", "4",
+                          "--prompt-len", "32", "--gen", "16"])
+    assert out["tokens"].shape == (4, 16)
+print("\nOK: batched serving across families")

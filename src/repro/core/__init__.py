@@ -1,0 +1,45 @@
+"""repro.core — the paper's contribution: a dataset management platform.
+
+Public surface:
+
+- Storage engine (source of truth): :class:`ObjectStore` over pluggable
+  :class:`StorageBackend`s (memory / filesystem).
+- Versioning: :class:`VersionStore` (commits, branches, tags, diff, merge).
+- Dataset manager: :class:`DatasetManager` (check-in/checkout, tags, query,
+  ACL enforcement).
+- Access control: :class:`AccessController`.
+- Transformation: :class:`Component` / :class:`Pipeline` (+ human tasks).
+- Workflow manager: :class:`WorkflowManager` (triggers, scheduling,
+  straggler-tolerant sharded runs).
+- Lineage: :class:`LineageGraph`; revocation: :class:`RevocationEngine`.
+"""
+
+from .acl import AccessController, Action, PermissionError_
+from .dataset import DatasetManager, Record, Snapshot
+from .lineage import EdgeKind, LineageGraph, NodeKind
+from .revocation import RevocationEngine, RevocationReport, RevokedError
+from .store import (BlobRef, FileBackend, IntegrityError, MemoryBackend,
+                    NotFoundError, ObjectStore, StorageBackend)
+from .transforms import (BatchComponent, Component, FilterComponent,
+                         FlatMapComponent, HumanTask, HumanTaskQueue,
+                         MapComponent, Pipeline, ProgramComponent,
+                         WaitingForHuman, component)
+from .versioning import (Commit, Manifest, MergeConflict, RecordEntry,
+                         VersionDiff, VersionStore)
+from .workflow import (RunState, ShardReport, Workflow, WorkflowManager,
+                       WorkflowRun)
+
+__all__ = [
+    "AccessController", "Action", "PermissionError_",
+    "DatasetManager", "Record", "Snapshot",
+    "EdgeKind", "LineageGraph", "NodeKind",
+    "RevocationEngine", "RevocationReport", "RevokedError",
+    "BlobRef", "FileBackend", "IntegrityError", "MemoryBackend",
+    "NotFoundError", "ObjectStore", "StorageBackend",
+    "BatchComponent", "Component", "FilterComponent", "FlatMapComponent",
+    "HumanTask", "HumanTaskQueue", "MapComponent", "Pipeline",
+    "ProgramComponent", "WaitingForHuman", "component",
+    "Commit", "Manifest", "MergeConflict", "RecordEntry", "VersionDiff",
+    "VersionStore",
+    "RunState", "ShardReport", "Workflow", "WorkflowManager", "WorkflowRun",
+]

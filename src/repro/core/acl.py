@@ -1,0 +1,191 @@
+"""Access control & security — enforced at check-in / checkout time.
+
+Paper: "The dataset manager enforces access control and permissions at the
+time of data check-in/checkout."
+
+Model
+-----
+- Principals are user ids (or service accounts — automated triggers act as
+  principals too, per Fig. 2's "actor" box).
+- Groups own sets of principals.
+- Permissions are grants ``(principal-or-group, dataset-pattern, action)``
+  where actions form a lattice: ADMIN > WRITE > READ.  Dataset patterns are
+  glob-ish (``*`` suffix wildcard) so namespaces like ``speech/*`` work.
+- Every allow/deny decision is appended to an audit log (persisted via the
+  store's meta namespace so it survives restarts).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import time
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Dict, List, Optional, Set
+
+from .store import ObjectStore
+
+__all__ = ["Action", "PermissionError_", "AccessController", "AuditEvent"]
+
+
+class Action(IntEnum):
+    READ = 1
+    WRITE = 2
+    ADMIN = 3
+
+    @staticmethod
+    def parse(name) -> "Action":
+        if isinstance(name, Action):
+            return name
+        return Action[str(name).upper()]
+
+
+class PermissionError_(PermissionError):
+    """Raised when an actor lacks permission (distinct from builtins name)."""
+
+
+@dataclass
+class AuditEvent:
+    timestamp: float
+    actor: str
+    action: str
+    dataset: str
+    allowed: bool
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return {
+            "ts": self.timestamp,
+            "actor": self.actor,
+            "action": self.action,
+            "dataset": self.dataset,
+            "allowed": self.allowed,
+            "note": self.note,
+        }
+
+
+@dataclass
+class _Grant:
+    subject: str          # principal or "group:<name>"
+    pattern: str          # dataset name pattern
+    action: Action
+
+    def to_json(self) -> dict:
+        return {"subject": self.subject, "pattern": self.pattern,
+                "action": int(self.action)}
+
+    @staticmethod
+    def from_json(o: dict) -> "_Grant":
+        return _Grant(o["subject"], o["pattern"], Action(o["action"]))
+
+
+class AccessController:
+    """Grant store + decision point + audit log.
+
+    ``open_world=True`` (default for library embedding) means datasets with
+    *no grants at all* are readable/writable by anyone — convenient for
+    tests and single-user use.  Production configs set ``open_world=False``.
+    """
+
+    _GRANTS_KEY = "acl/grants"
+    _GROUPS_KEY = "acl/groups"
+    _AUDIT_KEY = "acl/audit"
+
+    def __init__(self, store: Optional[ObjectStore] = None, open_world: bool = True):
+        self.store = store
+        self.open_world = open_world
+        self._grants: List[_Grant] = []
+        self._groups: Dict[str, Set[str]] = {}
+        self._audit: List[AuditEvent] = []
+        self._load()
+
+    # -- persistence -----------------------------------------------------------
+
+    def _load(self) -> None:
+        if self.store is None:
+            return
+        for g in self.store.get_meta(self._GRANTS_KEY, default=[]):
+            self._grants.append(_Grant.from_json(g))
+        for name, members in (self.store.get_meta(self._GROUPS_KEY, default={})).items():
+            self._groups[name] = set(members)
+
+    def _save(self) -> None:
+        if self.store is None:
+            return
+        self.store.put_meta(self._GRANTS_KEY, [g.to_json() for g in self._grants])
+        self.store.put_meta(
+            self._GROUPS_KEY, {k: sorted(v) for k, v in self._groups.items()}
+        )
+
+    # -- administration ----------------------------------------------------------
+
+    def grant(self, subject: str, pattern: str, action) -> None:
+        self._grants.append(_Grant(subject, pattern, Action.parse(action)))
+        self._save()
+
+    def revoke_grant(self, subject: str, pattern: str) -> None:
+        self._grants = [
+            g for g in self._grants
+            if not (g.subject == subject and g.pattern == pattern)
+        ]
+        self._save()
+
+    def add_to_group(self, group: str, principal: str) -> None:
+        self._groups.setdefault(group, set()).add(principal)
+        self._save()
+
+    def remove_from_group(self, group: str, principal: str) -> None:
+        self._groups.get(group, set()).discard(principal)
+        self._save()
+
+    # -- decisions ------------------------------------------------------------------
+
+    def _subjects_for(self, actor: str) -> Set[str]:
+        subjects = {actor, "*"}
+        for group, members in self._groups.items():
+            if actor in members:
+                subjects.add(f"group:{group}")
+        return subjects
+
+    def _has_any_grant(self, dataset: str) -> bool:
+        return any(fnmatch.fnmatch(dataset, g.pattern) for g in self._grants)
+
+    def is_allowed(self, actor: str, action, dataset: str) -> bool:
+        action = Action.parse(action)
+        if not self._has_any_grant(dataset):
+            return self.open_world
+        subjects = self._subjects_for(actor)
+        for g in self._grants:
+            if g.subject in subjects and fnmatch.fnmatch(dataset, g.pattern):
+                if g.action >= action:
+                    return True
+        return False
+
+    def check(self, actor: str, action, dataset: str, note: str = "") -> None:
+        """Decision point — raises on deny, records audit either way."""
+        action = Action.parse(action)
+        allowed = self.is_allowed(actor, action, dataset)
+        ev = AuditEvent(time.time(), actor, action.name, dataset, allowed, note)
+        self._audit.append(ev)
+        if self.store is not None and len(self._audit) % 64 == 0:
+            self.flush_audit()
+        if not allowed:
+            raise PermissionError_(
+                f"actor {actor!r} denied {action.name} on dataset {dataset!r}"
+            )
+
+    # -- audit ---------------------------------------------------------------------
+
+    def flush_audit(self) -> None:
+        if self.store is None:
+            return
+        existing = self.store.get_meta(self._AUDIT_KEY, default=[])
+        existing.extend(e.to_json() for e in self._audit)
+        self.store.put_meta(self._AUDIT_KEY, existing)
+        self._audit.clear()
+
+    def audit_log(self) -> List[dict]:
+        persisted = (
+            self.store.get_meta(self._AUDIT_KEY, default=[]) if self.store else []
+        )
+        return persisted + [e.to_json() for e in self._audit]

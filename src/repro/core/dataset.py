@@ -1,0 +1,327 @@
+"""Dataset manager — check-in / checkout, tagging, querying, ACL enforcement.
+
+Paper: "The dataset manager is used to store datasets, manage versions, for
+access control and to checkout datasets. ... Users can use a command-line
+interface (CLI) or other user interface to check-in data.  Data or datasets
+can be tagged with one or more tags. ... It also provides query
+capabilities, e.g., querying for datasets by tags, dataset name, or other
+attributes.  Users or workflows can checkout data by specifying query
+conditions.  The type of data stored is unrestricted."
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
+
+from .acl import AccessController, Action
+from .lineage import EdgeKind, LineageGraph, NodeKind
+from .store import BlobRef, MemoryBackend, ObjectStore
+from .versioning import (Commit, Manifest, RecordEntry, VersionDiff,
+                         VersionStore)
+
+__all__ = ["Record", "Snapshot", "DatasetManager", "version_node_id"]
+
+
+def version_node_id(dataset: str, commit_id: str) -> str:
+    return f"version:{dataset}@{commit_id[:16]}"
+
+
+@dataclass
+class Record:
+    """A unit of data checked into the platform.  Payload is arbitrary bytes
+    ("the type of data stored is unrestricted")."""
+
+    record_id: str
+    data: bytes
+    attrs: Dict[str, object] = field(default_factory=dict)
+
+
+class Snapshot:
+    """An immutable, queryable materialization of (a subset of) a version.
+
+    This is the paper's "dataset (snapshot) to serve different purposes":
+    the object handed to training / evaluation / labeling pipelines.
+    Payload bytes are fetched lazily from the CAS.
+    """
+
+    def __init__(
+        self,
+        snapshot_id: str,
+        dataset: str,
+        commit_id: str,
+        entries: Sequence[RecordEntry],
+        store: ObjectStore,
+    ) -> None:
+        self.snapshot_id = snapshot_id
+        self.dataset = dataset
+        self.commit_id = commit_id
+        self._entries = list(entries)
+        self._by_id = {e.record_id: e for e in self._entries}
+        self._store = store
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def record_ids(self) -> List[str]:
+        return [e.record_id for e in self._entries]
+
+    def entries(self) -> List[RecordEntry]:
+        return list(self._entries)
+
+    def attrs(self, record_id: str) -> Mapping[str, object]:
+        return self._by_id[record_id].attrs
+
+    def read(self, record_id: str) -> bytes:
+        return self._store.get_blob(self._by_id[record_id].blob)
+
+    def __iter__(self):
+        for e in self._entries:
+            yield Record(e.record_id, self._store.get_blob(e.blob), dict(e.attrs))
+
+    def content_digest(self) -> str:
+        """Deterministic digest of the snapshot contents (id order + blobs)."""
+        import hashlib
+
+        h = hashlib.sha256()
+        for e in self._entries:
+            h.update(e.record_id.encode())
+            h.update(e.blob.digest.encode())
+        return h.hexdigest()
+
+
+Predicate = Callable[[RecordEntry], bool]
+
+
+class DatasetManager:
+    """Core module #1 of the platform (Fig. 2)."""
+
+    def __init__(
+        self,
+        store: Optional[ObjectStore] = None,
+        acl: Optional[AccessController] = None,
+        lineage: Optional[LineageGraph] = None,
+    ) -> None:
+        self.store = store if store is not None else ObjectStore(MemoryBackend())
+        self.versions = VersionStore(self.store)
+        self.acl = acl if acl is not None else AccessController(self.store)
+        self.lineage = lineage if lineage is not None else LineageGraph(self.store)
+        # Commit listeners: the workflow manager subscribes here to implement
+        # "Trigger a workflow by event (new dataset version ...)".
+        self._commit_listeners: List[Callable[[str, Commit], None]] = []
+
+    def on_commit(self, fn: Callable[[str, Commit], None]) -> None:
+        self._commit_listeners.append(fn)
+
+    # ------------------------------------------------------------------ datasets
+
+    def _dataset_meta_key(self, name: str) -> str:
+        return f"dataset/{name}"
+
+    def list_datasets(self) -> List[str]:
+        prefix = "dataset/"
+        return sorted(k[len(prefix):] for k in self.store.list_meta(prefix))
+
+    def dataset_info(self, name: str) -> Optional[dict]:
+        return self.store.get_meta(self._dataset_meta_key(name))
+
+    def _ensure_dataset(self, name: str, actor: str) -> dict:
+        info = self.dataset_info(name)
+        if info is None:
+            info = {
+                "name": name,
+                "created_by": actor,
+                "created_at": time.time(),
+                "tags": [],
+            }
+            self.store.put_meta(self._dataset_meta_key(name), info)
+        return info
+
+    def tag_dataset(self, name: str, tag: str, actor: str) -> None:
+        self.acl.check(actor, Action.WRITE, name, note=f"tag_dataset:{tag}")
+        info = self._ensure_dataset(name, actor)
+        if tag not in info["tags"]:
+            info["tags"].append(tag)
+            self.store.put_meta(self._dataset_meta_key(name), info)
+
+    def query_datasets(
+        self,
+        name_glob: str = "*",
+        tags: Sequence[str] = (),
+        attrs: Optional[Mapping[str, object]] = None,
+    ) -> List[str]:
+        """Query datasets by name pattern / dataset tags / info attributes."""
+        out = []
+        for name in self.list_datasets():
+            if not fnmatch.fnmatch(name, name_glob):
+                continue
+            info = self.dataset_info(name) or {}
+            if tags and not set(tags).issubset(set(info.get("tags", []))):
+                continue
+            if attrs and any(info.get(k) != v for k, v in attrs.items()):
+                continue
+            out.append(name)
+        return out
+
+    # ------------------------------------------------------------------ check-in
+
+    def check_in(
+        self,
+        dataset: str,
+        records: Iterable[Record],
+        actor: str,
+        message: str = "",
+        branch: str = "main",
+        version_tags: Sequence[str] = (),
+        base: Optional[str] = None,
+        remove_ids: Sequence[str] = (),
+        derived_from: Sequence[str] = (),
+        produced_by: Optional[str] = None,
+        meta: Optional[Mapping[str, object]] = None,
+    ) -> Commit:
+        """Add/replace records on top of ``base`` (default: branch head).
+
+        ``derived_from`` — lineage node ids this version derives from.
+        ``produced_by``  — workflow/component run node id.
+        """
+        self.acl.check(actor, Action.WRITE, dataset, note="check_in")
+        self._ensure_dataset(dataset, actor)
+
+        base_id = base or self.versions.get_branch(dataset, branch)
+        manifest = (
+            self.versions.get_manifest(self.versions.get_commit(base_id).tree).copy()
+            if base_id
+            else Manifest()
+        )
+        new_ids: List[str] = []
+        for rec in records:
+            ref = self.store.put_blob(rec.data)
+            manifest.add(RecordEntry(rec.record_id, ref, dict(rec.attrs)))
+            new_ids.append(rec.record_id)
+        for rid in remove_ids:
+            manifest.remove(rid)
+
+        commit = self.versions.commit(
+            dataset,
+            manifest,
+            parents=[base_id] if base_id else [],
+            author=actor,
+            message=message,
+            meta=meta,
+        )
+        self.versions.set_branch(dataset, branch, commit.commit_id)
+        for tag in version_tags:
+            self.versions.set_tag(dataset, tag, commit.commit_id)
+
+        # Record-containment index (drives revocation without full scans).
+        self._index_records(dataset, commit.commit_id, manifest)
+
+        # Lineage: version node + derivation/production edges.
+        vnode = version_node_id(dataset, commit.commit_id)
+        self.lineage.add_node(vnode, NodeKind.DATASET_VERSION,
+                              dataset=dataset, commit=commit.commit_id,
+                              n_records=len(manifest))
+        if base_id:
+            self.lineage.add_edge(vnode, version_node_id(dataset, base_id),
+                                  EdgeKind.DERIVED_FROM)
+        for src in derived_from:
+            self.lineage.add_edge(vnode, src, EdgeKind.DERIVED_FROM)
+        if produced_by:
+            self.lineage.add_edge(vnode, produced_by, EdgeKind.PRODUCED_BY)
+        self.lineage.flush()
+        for fn in self._commit_listeners:
+            fn(dataset, commit)
+        return commit
+
+    def _index_records(self, dataset: str, commit_id: str, manifest: Manifest) -> None:
+        key = f"recindex/{dataset}"
+        idx: Dict[str, List[str]] = self.store.get_meta(key, default={})
+        for rid in manifest.record_ids():
+            idx.setdefault(rid, []).append(commit_id)
+        self.store.put_meta(key, idx)
+
+    # ------------------------------------------------------------------ checkout
+
+    def checkout(
+        self,
+        dataset: str,
+        actor: str,
+        rev: str = "main",
+        where: Optional[Predicate] = None,
+        attrs_equal: Optional[Mapping[str, object]] = None,
+        limit: Optional[int] = None,
+        register_snapshot: bool = True,
+    ) -> Snapshot:
+        """Materialize (a queried subset of) a dataset version.
+
+        "Users or workflows can checkout data by specifying query
+        conditions." — ``where`` is an arbitrary predicate over record
+        entries; ``attrs_equal`` is the common exact-match shorthand.
+        """
+        self.acl.check(actor, Action.READ, dataset, note=f"checkout:{rev}")
+        commit_id = self.versions.resolve(dataset, rev)
+        manifest = self.versions.get_manifest(self.versions.get_commit(commit_id).tree)
+        entries = manifest.entries()
+        if attrs_equal:
+            entries = [
+                e for e in entries
+                if all(e.attrs.get(k) == v for k, v in attrs_equal.items())
+            ]
+        if where is not None:
+            entries = [e for e in entries if where(e)]
+        if limit is not None:
+            entries = entries[:limit]
+        snap_id = f"snapshot:{uuid.uuid4().hex[:16]}"
+        snap = Snapshot(snap_id, dataset, commit_id, entries, self.store)
+        if register_snapshot:
+            self.lineage.add_node(snap_id, NodeKind.SNAPSHOT,
+                                  dataset=dataset, commit=commit_id,
+                                  n_records=len(entries),
+                                  content=snap.content_digest())
+            self.lineage.add_edge(snap_id, version_node_id(dataset, commit_id),
+                                  EdgeKind.DERIVED_FROM)
+            self.lineage.flush()
+        return snap
+
+    # ------------------------------------------------------------------ misc ops
+
+    def read_record(self, dataset: str, record_id: str, actor: str,
+                    rev: str = "main") -> bytes:
+        snap = self.checkout(dataset, actor, rev=rev, register_snapshot=False)
+        return snap.read(record_id)
+
+    def delete_records(self, dataset: str, record_ids: Sequence[str], actor: str,
+                       message: str = "delete records") -> Commit:
+        """Logical delete: a new version without the records."""
+        return self.check_in(dataset, [], actor, message=message,
+                             remove_ids=record_ids)
+
+    def diff(self, dataset: str, rev_a: str, rev_b: str, actor: str) -> VersionDiff:
+        self.acl.check(actor, Action.READ, dataset, note="diff")
+        a = self.versions.resolve(dataset, rev_a)
+        b = self.versions.resolve(dataset, rev_b)
+        return self.versions.diff(a, b)
+
+    def tag_version(self, dataset: str, rev: str, tag: str, actor: str) -> None:
+        self.acl.check(actor, Action.WRITE, dataset, note=f"tag:{tag}")
+        self.versions.set_tag(dataset, tag, self.versions.resolve(dataset, rev))
+
+    def versions_with_record(self, record_id: str) -> List[Tuple[str, str]]:
+        """(dataset, commit_id) pairs whose manifests contain the record."""
+        out: List[Tuple[str, str]] = []
+        for name in self.list_datasets():
+            idx = self.store.get_meta(f"recindex/{name}", default={})
+            for cid in idx.get(record_id, []):
+                out.append((name, cid))
+        return out
+
+    def gc(self) -> int:
+        """Collect unreferenced blobs (after revocations / history pruning)."""
+        roots: List[str] = []
+        for name in self.list_datasets():
+            roots.extend(self.versions.live_digests(name))
+        return self.store.gc(roots)

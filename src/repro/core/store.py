@@ -1,0 +1,401 @@
+"""Content-addressed storage engine — the platform's *source of truth*.
+
+The paper: "A storage engine is described that acts as a source of truth for
+all data and handles versioning, access control etc."  It also requires that
+"The type of data stored is unrestricted" and that "The underlying storage
+for the data can be any suitable mechanism such as a file system or cloud
+storage."
+
+Design
+------
+- Every blob is split into fixed-size chunks (default 4 MiB).  Each chunk is
+  stored under ``sha256(raw_chunk)`` — identical content across datasets and
+  versions dedupes structurally, which is what makes git-style versioning
+  viable for large binary ML data (the paper's critique of git is its object
+  model for large files, not the DAG).
+- Chunks may be zlib-compressed when that actually shrinks them; the chunk
+  header records the codec so reads are self-describing.
+- A multi-chunk blob gets a *blob manifest* (JSON list of chunk digests)
+  stored content-addressed as well; a ``BlobRef`` names the top digest.
+- Integrity: every read re-hashes and verifies; corruption raises
+  :class:`IntegrityError`.
+- Garbage collection is mark-and-sweep from a caller-provided root set
+  (commits / manifests / lineage heads own references).
+
+Backends implement a tiny KV interface so "file system or cloud storage" is
+a subclass away.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import struct
+import tempfile
+import threading
+import zlib
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Set
+
+__all__ = [
+    "StorageBackend",
+    "MemoryBackend",
+    "FileBackend",
+    "BlobRef",
+    "ObjectStore",
+    "IntegrityError",
+    "NotFoundError",
+]
+
+DEFAULT_CHUNK_SIZE = 4 * 1024 * 1024
+
+# Chunk header: 1 byte codec (0 = raw, 1 = zlib) + 8 byte big-endian raw size.
+_HDR = struct.Struct(">BQ")
+_CODEC_RAW = 0
+_CODEC_ZLIB = 1
+
+
+class IntegrityError(RuntimeError):
+    """Stored bytes do not hash to their address."""
+
+
+class NotFoundError(KeyError):
+    """Requested object is not in the store."""
+
+
+def sha256_hex(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class StorageBackend(ABC):
+    """Minimal KV contract every physical store satisfies."""
+
+    @abstractmethod
+    def put(self, key: str, data: bytes) -> None: ...
+
+    @abstractmethod
+    def get(self, key: str) -> bytes: ...
+
+    @abstractmethod
+    def exists(self, key: str) -> bool: ...
+
+    @abstractmethod
+    def delete(self, key: str) -> None: ...
+
+    @abstractmethod
+    def list_keys(self, prefix: str = "") -> Iterator[str]: ...
+
+
+class MemoryBackend(StorageBackend):
+    """In-process store for tests and ephemeral pipelines."""
+
+    def __init__(self) -> None:
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._data[key] = bytes(data)
+
+    def get(self, key: str) -> bytes:
+        try:
+            return self._data[key]
+        except KeyError:
+            raise NotFoundError(key) from None
+
+    def exists(self, key: str) -> bool:
+        return key in self._data
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def list_keys(self, prefix: str = "") -> Iterator[str]:
+        # Snapshot under lock so concurrent writers don't invalidate iteration.
+        with self._lock:
+            keys = [k for k in self._data if k.startswith(prefix)]
+        return iter(sorted(keys))
+
+
+class FileBackend(StorageBackend):
+    """Local-filesystem store; two-level fan-out to keep directories small.
+
+    Writes are atomic (tempfile + rename) so a crashed pipeline never leaves
+    a half-written chunk at a content address.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    @staticmethod
+    def _encode_key(key: str) -> str:
+        return key.replace("%", "%25").replace("/", "%2F")
+
+    @staticmethod
+    def _decode_key(name: str) -> str:
+        return name.replace("%2F", "/").replace("%25", "%")
+
+    def _path(self, key: str) -> str:
+        safe = self._encode_key(key)
+        if len(safe) >= 4:
+            return os.path.join(self.root, safe[:2], safe[2:4], safe)
+        return os.path.join(self.root, "__short__", safe)
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        # Skip rewrites ONLY for content-addressed namespaces (same key ⇒
+        # same bytes); mutable ``meta/`` keys must always be replaced.
+        if not key.startswith("meta/") and os.path.exists(path):
+            return
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get(self, key: str) -> bytes:
+        path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise NotFoundError(key) from None
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def list_keys(self, prefix: str = "") -> Iterator[str]:
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for name in filenames:
+                key = self._decode_key(name)
+                if key.startswith(prefix):
+                    yield key
+
+
+# ---------------------------------------------------------------------------
+# Object store
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlobRef:
+    """Handle to a stored blob: content digest + logical size."""
+
+    digest: str
+    size: int
+    n_chunks: int = 1
+
+    def to_json(self) -> dict:
+        return {"digest": self.digest, "size": self.size, "n_chunks": self.n_chunks}
+
+    @staticmethod
+    def from_json(obj: dict) -> "BlobRef":
+        return BlobRef(obj["digest"], int(obj["size"]), int(obj.get("n_chunks", 1)))
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    dedup_hits: int = 0
+    bytes_in: int = 0
+    bytes_stored: int = 0
+
+
+class ObjectStore:
+    """Chunked, deduplicating, content-addressed store over a backend."""
+
+    # Key namespaces.  Chunks and blob manifests are content-addressed; the
+    # ``meta/`` namespace is mutable (refs, graphs) and is NOT content-keyed.
+    _CHUNK = "c-"
+    _BLOBMAN = "b-"
+    META = "meta/"
+
+    def __init__(
+        self,
+        backend: Optional[StorageBackend] = None,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        compress: bool = True,
+    ) -> None:
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        self.backend = backend if backend is not None else MemoryBackend()
+        self.chunk_size = chunk_size
+        self.compress = compress
+        self.stats = StoreStats()
+
+    # -- chunk plumbing ----------------------------------------------------
+
+    def _encode(self, raw: bytes) -> bytes:
+        if self.compress and len(raw) > 64:
+            z = zlib.compress(raw, 1)
+            if len(z) < len(raw):
+                return _HDR.pack(_CODEC_ZLIB, len(raw)) + z
+        return _HDR.pack(_CODEC_RAW, len(raw)) + raw
+
+    @staticmethod
+    def _decode(stored: bytes) -> bytes:
+        codec, raw_len = _HDR.unpack_from(stored)
+        body = stored[_HDR.size :]
+        if codec == _CODEC_RAW:
+            raw = body
+        elif codec == _CODEC_ZLIB:
+            raw = zlib.decompress(body)
+        else:  # pragma: no cover - corrupted header
+            raise IntegrityError(f"unknown codec byte {codec}")
+        if len(raw) != raw_len:
+            raise IntegrityError("chunk size mismatch after decode")
+        return raw
+
+    def _put_chunk(self, raw: bytes) -> str:
+        digest = sha256_hex(raw)
+        key = self._CHUNK + digest
+        self.stats.bytes_in += len(raw)
+        if self.backend.exists(key):
+            self.stats.dedup_hits += 1
+            return digest
+        enc = self._encode(raw)
+        self.backend.put(key, enc)
+        self.stats.puts += 1
+        self.stats.bytes_stored += len(enc)
+        return digest
+
+    def _get_chunk(self, digest: str) -> bytes:
+        raw = self._decode(self.backend.get(self._CHUNK + digest))
+        if sha256_hex(raw) != digest:
+            raise IntegrityError(f"chunk {digest[:12]}… failed verification")
+        self.stats.gets += 1
+        return raw
+
+    # -- blob API ------------------------------------------------------------
+
+    def put_blob(self, data: bytes) -> BlobRef:
+        """Store arbitrary bytes; returns a stable content-addressed ref."""
+        data = bytes(data)
+        if len(data) <= self.chunk_size:
+            digest = self._put_chunk(data)
+            return BlobRef(digest, len(data), 1)
+        chunk_digests: List[str] = []
+        for off in range(0, len(data), self.chunk_size):
+            chunk_digests.append(self._put_chunk(data[off : off + self.chunk_size]))
+        manifest = json.dumps(
+            {"chunks": chunk_digests, "size": len(data)}, separators=(",", ":")
+        ).encode()
+        top = sha256_hex(manifest)
+        self.backend.put(self._BLOBMAN + top, manifest)
+        return BlobRef(top, len(data), len(chunk_digests))
+
+    def get_blob(self, ref) -> bytes:
+        """Fetch a blob by :class:`BlobRef` or digest string."""
+        if isinstance(ref, BlobRef):
+            digest, n_chunks = ref.digest, ref.n_chunks
+        else:
+            digest, n_chunks = ref, None
+        if n_chunks == 1:
+            return self._get_chunk(digest)
+        # Multi-chunk (or unknown): try blob manifest first, else single chunk.
+        man_key = self._BLOBMAN + digest
+        if self.backend.exists(man_key):
+            man = json.loads(self.backend.get(man_key))
+            parts = [self._get_chunk(d) for d in man["chunks"]]
+            out = b"".join(parts)
+            if len(out) != man["size"]:
+                raise IntegrityError("blob size mismatch")
+            return out
+        return self._get_chunk(digest)
+
+    def has_blob(self, digest: str) -> bool:
+        return self.backend.exists(self._CHUNK + digest) or self.backend.exists(
+            self._BLOBMAN + digest
+        )
+
+    def delete_blob(self, ref) -> None:
+        """Physically remove a blob (used by revocation + GC)."""
+        digest = ref.digest if isinstance(ref, BlobRef) else ref
+        man_key = self._BLOBMAN + digest
+        if self.backend.exists(man_key):
+            man = json.loads(self.backend.get(man_key))
+            for d in man["chunks"]:
+                self.backend.delete(self._CHUNK + d)
+            self.backend.delete(man_key)
+        else:
+            self.backend.delete(self._CHUNK + digest)
+
+    # -- JSON convenience (commits, manifests, graphs) -----------------------
+
+    def put_json(self, obj) -> BlobRef:
+        return self.put_blob(
+            json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+        )
+
+    def get_json(self, ref):
+        return json.loads(self.get_blob(ref).decode())
+
+    # -- mutable metadata (refs live here, not content-addressed) ------------
+
+    def put_meta(self, name: str, obj) -> None:
+        self.backend.put(self.META + name, json.dumps(obj, sort_keys=True).encode())
+
+    def get_meta(self, name: str, default=None):
+        key = self.META + name
+        if not self.backend.exists(key):
+            return default
+        return json.loads(self.backend.get(key).decode())
+
+    def delete_meta(self, name: str) -> None:
+        self.backend.delete(self.META + name)
+
+    def list_meta(self, prefix: str = "") -> List[str]:
+        plen = len(self.META)
+        return [k[plen:] for k in self.backend.list_keys(self.META + prefix)]
+
+    # -- garbage collection ---------------------------------------------------
+
+    def reachable_from(self, blob_digests: Iterable[str]) -> Set[str]:
+        """Expand top-level blob digests to the full set of live keys."""
+        live: Set[str] = set()
+        for digest in blob_digests:
+            man_key = self._BLOBMAN + digest
+            if self.backend.exists(man_key):
+                live.add(man_key)
+                man = json.loads(self.backend.get(man_key))
+                for d in man["chunks"]:
+                    live.add(self._CHUNK + d)
+            else:
+                live.add(self._CHUNK + digest)
+        return live
+
+    def gc(self, roots: Iterable[str]) -> int:
+        """Mark-and-sweep: delete every chunk/manifest not reachable from roots.
+
+        ``roots`` are top-level blob digests (commit blobs, manifests, graph
+        heads...).  Returns the number of keys deleted.  ``meta/`` keys are
+        never collected.
+        """
+        live = self.reachable_from(roots)
+        dead = [
+            k
+            for k in self.backend.list_keys()
+            if not k.startswith(self.META) and k not in live
+        ]
+        for k in dead:
+            self.backend.delete(k)
+        return len(dead)

@@ -1,0 +1,300 @@
+"""Dataset transformation components and pipelines.
+
+Paper: "Individual modules in a pipeline are shareable, reusable, and
+chainable.  A pipeline operates similar to the extract-transform-load (ETL)
+pipelines common in big data applications but is more specific to machine
+learning use cases.  A pipeline is lightweight to implement (e.g., is
+implemented via a few lines of Python code), enables quick iteration, and is
+easy to run."  and: "There are two types of components: program based data
+processing unit and human work based data processing unit."
+
+The contract: a :class:`Component` maps a stream of :class:`Record`s to a
+stream of :class:`Record`s.  Components are deterministic given (config,
+seed, input) so a pipeline re-run on the same snapshot produces the same
+output digest — which is what makes speculative/straggler re-execution and
+caching sound in the workflow manager.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+import uuid
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterable, Iterator, List, Mapping,
+                    Optional, Sequence, Union)
+
+from .dataset import Record, Snapshot
+
+__all__ = [
+    "Component",
+    "ProgramComponent",
+    "MapComponent",
+    "FilterComponent",
+    "FlatMapComponent",
+    "BatchComponent",
+    "HumanTask",
+    "HumanTaskQueue",
+    "WaitingForHuman",
+    "Pipeline",
+    "component",
+]
+
+
+class Component(ABC):
+    """One processing unit in a pipeline (a gray block in Fig. 1)."""
+
+    name: str = "component"
+
+    def __init__(self, name: Optional[str] = None, **config) -> None:
+        if name is not None:
+            self.name = name
+        self.config: Dict[str, object] = config
+
+    @abstractmethod
+    def process(self, records: Iterable[Record], ctx: "RunContext"
+                ) -> Iterator[Record]: ...
+
+    def fingerprint(self) -> str:
+        """Digest of (type, name, config) — cache / lineage identity."""
+        body = json.dumps(
+            {"type": type(self).__name__, "name": self.name,
+             "config": {k: repr(v) for k, v in sorted(self.config.items())}},
+            sort_keys=True,
+        )
+        return hashlib.sha256(body.encode()).hexdigest()[:16]
+
+    # Chaining sugar: ``a | b | c`` builds a Pipeline.
+    def __or__(self, other: Union["Component", "Pipeline"]) -> "Pipeline":
+        if isinstance(other, Pipeline):
+            return Pipeline([self, *other.components])
+        return Pipeline([self, other])
+
+
+@dataclass
+class RunContext:
+    """Carries run-scoped state into components."""
+
+    run_id: str = "interactive"
+    seed: int = 0
+    shard_index: int = 0
+    n_shards: int = 1
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def bump(self, key: str, amount: float = 1.0) -> None:
+        self.stats[key] = self.stats.get(key, 0.0) + amount
+
+
+# ---------------------------------------------------------------------------
+# Program-based processing units
+# ---------------------------------------------------------------------------
+
+
+class ProgramComponent(Component):
+    """Wraps a user function over the whole stream."""
+
+    def __init__(self, fn: Callable[[Iterable[Record], RunContext], Iterator[Record]],
+                 name: Optional[str] = None, **config) -> None:
+        super().__init__(name=name or fn.__name__, **config)
+        self.fn = fn
+
+    def process(self, records, ctx):
+        return self.fn(records, ctx)
+
+
+class MapComponent(Component):
+    """record -> record."""
+
+    def __init__(self, fn: Callable[[Record], Record], name: Optional[str] = None,
+                 **config) -> None:
+        super().__init__(name=name or f"map:{fn.__name__}", **config)
+        self.fn = fn
+
+    def process(self, records, ctx):
+        for rec in records:
+            ctx.bump(f"{self.name}.in")
+            out = self.fn(rec)
+            ctx.bump(f"{self.name}.out")
+            yield out
+
+
+class FilterComponent(Component):
+    """record -> keep?"""
+
+    def __init__(self, pred: Callable[[Record], bool], name: Optional[str] = None,
+                 **config) -> None:
+        super().__init__(name=name or f"filter:{pred.__name__}", **config)
+        self.pred = pred
+
+    def process(self, records, ctx):
+        for rec in records:
+            ctx.bump(f"{self.name}.in")
+            if self.pred(rec):
+                ctx.bump(f"{self.name}.kept")
+                yield rec
+
+
+class FlatMapComponent(Component):
+    """record -> 0..n records (splitting documents, augmentation...)."""
+
+    def __init__(self, fn: Callable[[Record], Iterable[Record]],
+                 name: Optional[str] = None, **config) -> None:
+        super().__init__(name=name or f"flatmap:{fn.__name__}", **config)
+        self.fn = fn
+
+    def process(self, records, ctx):
+        for rec in records:
+            ctx.bump(f"{self.name}.in")
+            for out in self.fn(rec):
+                ctx.bump(f"{self.name}.out")
+                yield out
+
+
+class BatchComponent(Component):
+    """batch(list[record]) -> list[record]; for vectorized transforms."""
+
+    def __init__(self, fn: Callable[[List[Record]], List[Record]],
+                 batch_size: int = 256, name: Optional[str] = None,
+                 **config) -> None:
+        super().__init__(name=name or f"batch:{fn.__name__}",
+                         batch_size=batch_size, **config)
+        self.fn = fn
+        self.batch_size = batch_size
+
+    def process(self, records, ctx):
+        buf: List[Record] = []
+        for rec in records:
+            buf.append(rec)
+            if len(buf) >= self.batch_size:
+                for out in self.fn(buf):
+                    yield out
+                buf = []
+        if buf:
+            for out in self.fn(buf):
+                yield out
+
+
+def component(fn=None, *, kind: str = "map", **config):
+    """Decorator: turn a plain function into a Component ("a few lines of
+    Python code" — paper)."""
+
+    def wrap(f):
+        if kind == "map":
+            return MapComponent(f, **config)
+        if kind == "filter":
+            return FilterComponent(f, **config)
+        if kind == "flatmap":
+            return FlatMapComponent(f, **config)
+        if kind == "stream":
+            return ProgramComponent(f, **config)
+        raise ValueError(f"unknown component kind {kind!r}")
+
+    return wrap if fn is None else wrap(fn)
+
+
+# ---------------------------------------------------------------------------
+# Human-work-based processing units
+# ---------------------------------------------------------------------------
+
+
+class WaitingForHuman(Exception):
+    """Raised by a pipeline run that reached a HumanTask with pending items;
+    the workflow manager parks the run and resumes it on completion."""
+
+    def __init__(self, task_id: str, pending: int):
+        super().__init__(f"human task {task_id} waiting on {pending} item(s)")
+        self.task_id = task_id
+        self.pending = pending
+
+
+class HumanTaskQueue:
+    """Persistent queue of items awaiting human action (labeling etc.)."""
+
+    def __init__(self) -> None:
+        self._pending: Dict[str, Dict[str, Record]] = {}
+        self._done: Dict[str, Dict[str, Record]] = {}
+
+    def submit(self, task_id: str, records: Sequence[Record]) -> None:
+        pend = self._pending.setdefault(task_id, {})
+        done = self._done.setdefault(task_id, {})
+        for r in records:
+            if r.record_id not in done:
+                pend.setdefault(r.record_id, r)
+
+    def pending(self, task_id: str) -> List[Record]:
+        return list(self._pending.get(task_id, {}).values())
+
+    def complete(self, task_id: str, record_id: str, data: bytes,
+                 **attrs) -> None:
+        pend = self._pending.setdefault(task_id, {})
+        src = pend.pop(record_id, None)
+        base_attrs = dict(src.attrs) if src else {}
+        base_attrs.update(attrs)
+        self._done.setdefault(task_id, {})[record_id] = Record(
+            record_id, data, base_attrs)
+
+    def results(self, task_id: str) -> List[Record]:
+        return list(self._done.get(task_id, {}).values())
+
+    def is_complete(self, task_id: str) -> bool:
+        return not self._pending.get(task_id)
+
+
+class HumanTask(Component):
+    """A "human work based data processing unit".
+
+    First pass: submits every incoming record to the queue and raises
+    :class:`WaitingForHuman`.  Once humans complete all items the pipeline
+    re-runs and this component yields the human-produced records.
+    """
+
+    def __init__(self, queue: HumanTaskQueue, task_id: Optional[str] = None,
+                 name: str = "human_task", **config) -> None:
+        super().__init__(name=name, **config)
+        self.queue = queue
+        self.task_id = task_id or f"task-{uuid.uuid4().hex[:8]}"
+
+    def process(self, records, ctx):
+        incoming = list(records)
+        self.queue.submit(self.task_id, incoming)
+        if not self.queue.is_complete(self.task_id):
+            raise WaitingForHuman(self.task_id,
+                                  len(self.queue.pending(self.task_id)))
+        for rec in self.queue.results(self.task_id):
+            ctx.bump(f"{self.name}.out")
+            yield rec
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    """A chain of components — the paper's user-defined workflow body."""
+
+    def __init__(self, components: Sequence[Component], name: str = "pipeline"):
+        self.components = list(components)
+        self.name = name
+
+    def __or__(self, other: Union[Component, "Pipeline"]) -> "Pipeline":
+        if isinstance(other, Pipeline):
+            return Pipeline([*self.components, *other.components], self.name)
+        return Pipeline([*self.components, other], self.name)
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        for c in self.components:
+            h.update(c.fingerprint().encode())
+        return h.hexdigest()[:16]
+
+    def run(self, records: Union[Snapshot, Iterable[Record]],
+            ctx: Optional[RunContext] = None) -> List[Record]:
+        """Run the full chain eagerly; returns the output records."""
+        ctx = ctx or RunContext()
+        stream: Iterable[Record] = iter(records)
+        for comp in self.components:
+            stream = comp.process(stream, ctx)
+        return list(stream)

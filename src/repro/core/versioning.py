@@ -1,0 +1,366 @@
+"""Dataset versioning: merkle manifests, commit DAG, refs, diff and merge.
+
+Paper features covered here: "Dataset versioning — Version control and
+version difference".
+
+A dataset *version* is a :class:`Commit` pointing at a *manifest*: the
+ordered map ``record_id -> (blob digest, attrs)``.  Manifests are stored
+content-addressed, so two versions that share most records share the
+manifest's record entries byte-for-byte at the chunk level and the blobs
+themselves dedupe in the CAS.  Commits form a DAG (parents), enabling
+branches, tags, three-way merge and O(changed) diffs.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .store import BlobRef, NotFoundError, ObjectStore, sha256_hex
+
+__all__ = [
+    "RecordEntry",
+    "Manifest",
+    "Commit",
+    "VersionDiff",
+    "MergeConflict",
+    "VersionStore",
+]
+
+
+@dataclass(frozen=True)
+class RecordEntry:
+    """One record inside a dataset version."""
+
+    record_id: str
+    blob: BlobRef
+    attrs: Mapping[str, object] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "id": self.record_id,
+            "blob": self.blob.to_json(),
+            "attrs": dict(self.attrs),
+        }
+
+    @staticmethod
+    def from_json(obj: dict) -> "RecordEntry":
+        return RecordEntry(obj["id"], BlobRef.from_json(obj["blob"]), obj.get("attrs", {}))
+
+
+class Manifest:
+    """Ordered record_id -> RecordEntry map; content-addressed when stored."""
+
+    def __init__(self, entries: Optional[Iterable[RecordEntry]] = None) -> None:
+        self._entries: Dict[str, RecordEntry] = {}
+        for e in entries or []:
+            self.add(e)
+
+    def add(self, entry: RecordEntry) -> None:
+        self._entries[entry.record_id] = entry
+
+    def remove(self, record_id: str) -> None:
+        self._entries.pop(record_id, None)
+
+    def get(self, record_id: str) -> Optional[RecordEntry]:
+        return self._entries.get(record_id)
+
+    def __contains__(self, record_id: str) -> bool:
+        return record_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self):
+        return iter(self.entries())
+
+    def record_ids(self) -> List[str]:
+        return sorted(self._entries)
+
+    def entries(self) -> List[RecordEntry]:
+        return [self._entries[rid] for rid in self.record_ids()]
+
+    def to_json(self) -> dict:
+        return {"records": [e.to_json() for e in self.entries()]}
+
+    @staticmethod
+    def from_json(obj: dict) -> "Manifest":
+        return Manifest(RecordEntry.from_json(e) for e in obj.get("records", []))
+
+    def copy(self) -> "Manifest":
+        return Manifest(self.entries())
+
+
+@dataclass(frozen=True)
+class Commit:
+    """One immutable dataset version."""
+
+    commit_id: str            # digest of the commit body
+    dataset: str
+    tree: str                 # manifest blob digest
+    parents: Tuple[str, ...]
+    author: str
+    message: str
+    timestamp: float
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "dataset": self.dataset,
+            "tree": self.tree,
+            "parents": list(self.parents),
+            "author": self.author,
+            "message": self.message,
+            "timestamp": self.timestamp,
+            "meta": dict(self.meta),
+        }
+
+    @staticmethod
+    def from_json(commit_id: str, obj: dict) -> "Commit":
+        return Commit(
+            commit_id=commit_id,
+            dataset=obj["dataset"],
+            tree=obj["tree"],
+            parents=tuple(obj.get("parents", [])),
+            author=obj.get("author", ""),
+            message=obj.get("message", ""),
+            timestamp=obj.get("timestamp", 0.0),
+            meta=obj.get("meta", {}),
+        )
+
+
+@dataclass
+class VersionDiff:
+    """Difference between two versions — the paper's "version difference"."""
+
+    added: List[str] = field(default_factory=list)
+    removed: List[str] = field(default_factory=list)
+    modified: List[str] = field(default_factory=list)
+    unchanged: int = 0
+
+    @property
+    def is_empty(self) -> bool:
+        return not (self.added or self.removed or self.modified)
+
+    def summary(self) -> str:
+        return (
+            f"+{len(self.added)} -{len(self.removed)} ~{len(self.modified)} "
+            f"={self.unchanged}"
+        )
+
+
+class MergeConflict(RuntimeError):
+    def __init__(self, record_ids: Sequence[str]):
+        super().__init__(f"merge conflict on {len(record_ids)} record(s): "
+                         f"{list(record_ids)[:5]}")
+        self.record_ids = list(record_ids)
+
+
+class VersionStore:
+    """Commit/ref layer over an :class:`ObjectStore`.
+
+    Refs are mutable metadata: ``refs/<dataset>/heads/<branch>`` and
+    ``refs/<dataset>/tags/<tag>`` point at commit ids.
+    """
+
+    def __init__(self, store: ObjectStore) -> None:
+        self.store = store
+
+    # -- manifests -----------------------------------------------------------
+
+    def put_manifest(self, manifest: Manifest) -> str:
+        return self.store.put_json(manifest.to_json()).digest
+
+    def get_manifest(self, tree_digest: str) -> Manifest:
+        return Manifest.from_json(self.store.get_json(tree_digest))
+
+    # -- commits ---------------------------------------------------------------
+
+    def commit(
+        self,
+        dataset: str,
+        manifest: Manifest,
+        parents: Sequence[str],
+        author: str,
+        message: str,
+        meta: Optional[Mapping[str, object]] = None,
+        timestamp: Optional[float] = None,
+    ) -> Commit:
+        tree = self.put_manifest(manifest)
+        body = {
+            "dataset": dataset,
+            "tree": tree,
+            "parents": list(parents),
+            "author": author,
+            "message": message,
+            "timestamp": time.time() if timestamp is None else timestamp,
+            "meta": dict(meta or {}),
+        }
+        ref = self.store.put_json(body)
+        commit = Commit.from_json(ref.digest, body)
+        # Index commit ids per dataset for listing/GC roots.
+        idx = self.store.get_meta(f"commits/{dataset}", default=[])
+        if ref.digest not in idx:
+            idx.append(ref.digest)
+            self.store.put_meta(f"commits/{dataset}", idx)
+        return commit
+
+    def get_commit(self, commit_id: str) -> Commit:
+        return Commit.from_json(commit_id, self.store.get_json(commit_id))
+
+    def list_commits(self, dataset: str) -> List[str]:
+        return list(self.store.get_meta(f"commits/{dataset}", default=[]))
+
+    def log(self, commit_id: str, limit: int = 100) -> List[Commit]:
+        """First-parent history, newest first."""
+        out: List[Commit] = []
+        cur: Optional[str] = commit_id
+        while cur and len(out) < limit:
+            c = self.get_commit(cur)
+            out.append(c)
+            cur = c.parents[0] if c.parents else None
+        return out
+
+    # -- refs -------------------------------------------------------------------
+
+    def set_branch(self, dataset: str, branch: str, commit_id: str) -> None:
+        self.store.put_meta(f"refs/{dataset}/heads/{branch}", commit_id)
+
+    def get_branch(self, dataset: str, branch: str) -> Optional[str]:
+        return self.store.get_meta(f"refs/{dataset}/heads/{branch}")
+
+    def set_tag(self, dataset: str, tag: str, commit_id: str) -> None:
+        self.store.put_meta(f"refs/{dataset}/tags/{tag}", commit_id)
+
+    def get_tag(self, dataset: str, tag: str) -> Optional[str]:
+        return self.store.get_meta(f"refs/{dataset}/tags/{tag}")
+
+    def list_branches(self, dataset: str) -> List[str]:
+        prefix = f"refs/{dataset}/heads/"
+        return [k[len(prefix):] for k in self.store.list_meta(prefix)]
+
+    def list_tags(self, dataset: str) -> List[str]:
+        prefix = f"refs/{dataset}/tags/"
+        return [k[len(prefix):] for k in self.store.list_meta(prefix)]
+
+    def resolve(self, dataset: str, rev: str) -> str:
+        """Resolve branch / tag / commit-id to a commit id."""
+        for getter in (self.get_branch, self.get_tag):
+            found = getter(dataset, rev)
+            if found:
+                return found
+        try:
+            self.get_commit(rev)
+            return rev
+        except NotFoundError:
+            raise NotFoundError(f"unknown revision {rev!r} for dataset {dataset!r}")
+
+    # -- diff / merge -------------------------------------------------------------
+
+    def diff(self, commit_a: str, commit_b: str) -> VersionDiff:
+        """What changed going a -> b.  O(records), digest comparison only."""
+        ma = self.get_manifest(self.get_commit(commit_a).tree)
+        mb = self.get_manifest(self.get_commit(commit_b).tree)
+        return diff_manifests(ma, mb)
+
+    def merge_base(self, a: str, b: str) -> Optional[str]:
+        """Nearest common ancestor (BFS over parents)."""
+        seen_a: Dict[str, int] = {}
+        frontier = [(a, 0)]
+        while frontier:
+            cid, d = frontier.pop(0)
+            if cid in seen_a:
+                continue
+            seen_a[cid] = d
+            frontier.extend((p, d + 1) for p in self.get_commit(cid).parents)
+        best: Tuple[int, Optional[str]] = (1 << 30, None)
+        frontier = [(b, 0)]
+        seen_b = set()
+        while frontier:
+            cid, d = frontier.pop(0)
+            if cid in seen_b:
+                continue
+            seen_b.add(cid)
+            if cid in seen_a:
+                best = min(best, (seen_a[cid] + d, cid))
+                continue
+            frontier.extend((p, d + 1) for p in self.get_commit(cid).parents)
+        return best[1]
+
+    def merge(
+        self,
+        dataset: str,
+        ours: str,
+        theirs: str,
+        author: str,
+        message: str = "merge",
+    ) -> Commit:
+        """Three-way merge at record granularity.
+
+        A record changed on both sides to *different* blobs is a conflict
+        (raised, never silently resolved — datasets are training inputs).
+        """
+        base_id = self.merge_base(ours, theirs)
+        base = (
+            self.get_manifest(self.get_commit(base_id).tree)
+            if base_id
+            else Manifest()
+        )
+        mo = self.get_manifest(self.get_commit(ours).tree)
+        mt = self.get_manifest(self.get_commit(theirs).tree)
+
+        merged = mo.copy()
+        conflicts: List[str] = []
+        all_ids = set(base.record_ids()) | set(mo.record_ids()) | set(mt.record_ids())
+        for rid in sorted(all_ids):
+            eb, eo, et = base.get(rid), mo.get(rid), mt.get(rid)
+            db = eb.blob.digest if eb else None
+            do = eo.blob.digest if eo else None
+            dt = et.blob.digest if et else None
+            if do == dt:
+                continue  # same on both sides (incl. both deleted)
+            if dt == db:
+                continue  # theirs untouched -> keep ours (already in merged)
+            if do == db:
+                # ours untouched -> take theirs
+                if et is None:
+                    merged.remove(rid)
+                else:
+                    merged.add(et)
+                continue
+            conflicts.append(rid)
+        if conflicts:
+            raise MergeConflict(conflicts)
+        return self.commit(
+            dataset, merged, parents=[ours, theirs], author=author, message=message
+        )
+
+    # -- GC roots -----------------------------------------------------------------
+
+    def live_digests(self, dataset: str) -> List[str]:
+        """Top-level digests kept alive by this dataset's history."""
+        out: List[str] = []
+        for cid in self.list_commits(dataset):
+            out.append(cid)
+            try:
+                c = self.get_commit(cid)
+            except NotFoundError:
+                continue
+            out.append(c.tree)
+            for e in self.get_manifest(c.tree).entries():
+                out.append(e.blob.digest)
+        return out
+
+
+def diff_manifests(ma: Manifest, mb: Manifest) -> VersionDiff:
+    d = VersionDiff()
+    ids_a, ids_b = set(ma.record_ids()), set(mb.record_ids())
+    d.added = sorted(ids_b - ids_a)
+    d.removed = sorted(ids_a - ids_b)
+    for rid in sorted(ids_a & ids_b):
+        if ma.get(rid).blob.digest != mb.get(rid).blob.digest:  # type: ignore[union-attr]
+            d.modified.append(rid)
+        else:
+            d.unchanged += 1
+    return d

@@ -1,0 +1,344 @@
+"""Workflow manager — registration, resource allocation, scheduling, runs.
+
+Paper: "A user that uses the data management platform can register their
+workflow to the workflow manager.  The workflow manager allocates resources,
+schedules runs, and reports results. ... The workflow manager allocates
+computing resources to the computing components of a workflow to support
+large scale data processing.  The lineage of data is also tracked."
+
+Triggers (paper, Key Features): manual, by event (new dataset version), and
+by time schedule.
+
+Execution model
+---------------
+A run checks out the workflow's input query, splits the records into
+``n_shards`` shards, and executes the pipeline per-shard on a bounded worker
+pool (the "allocated resources").  Shards that fail are retried with
+exponential backoff; shards that straggle beyond ``speculative_factor`` × the
+median completed-shard duration get a **speculative duplicate** launched
+(MapReduce backup tasks) — first finisher wins, results are deterministic
+because components are deterministic.  Runs that hit a
+:class:`~repro.core.transforms.WaitingForHuman` park in ``WAITING_HUMAN`` and
+resume via :meth:`WorkflowManager.resume`.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+import uuid
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .dataset import DatasetManager, Record, Snapshot, version_node_id
+from .lineage import EdgeKind, NodeKind
+from .transforms import Pipeline, RunContext, WaitingForHuman
+from .versioning import Commit
+
+__all__ = ["Workflow", "WorkflowRun", "RunState", "WorkflowManager",
+           "ShardReport"]
+
+
+class RunState:
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    WAITING_HUMAN = "WAITING_HUMAN"
+    SUCCEEDED = "SUCCEEDED"
+    FAILED = "FAILED"
+
+
+@dataclass
+class Workflow:
+    """A registered workflow: input query -> pipeline -> output spec."""
+
+    name: str
+    pipeline: Pipeline
+    input_dataset: str
+    input_rev: str = "main"
+    input_attrs_equal: Optional[Mapping[str, object]] = None
+    # If set, output records are checked in as a new version of this dataset
+    # ("the new version of data in snapshot 3 is committed to the data
+    # repository for future use" — Fig. 1 pipeline Y).  If None the output
+    # snapshot is only materialized (Fig. 1 pipelines X and Z).
+    output_dataset: Optional[str] = None
+    output_message: str = ""
+    n_shards: int = 4
+    max_retries: int = 2
+    speculative_factor: float = 3.0
+    min_speculative_wait_s: float = 0.05
+    actor: str = "workflow-manager"
+
+    # triggers
+    trigger_on_commit_to: Optional[str] = None
+    trigger_every_s: Optional[float] = None
+
+
+@dataclass
+class ShardReport:
+    shard: int
+    attempts: int = 0
+    speculative: bool = False
+    duration_s: float = 0.0
+    n_in: int = 0
+    n_out: int = 0
+    error: str = ""
+
+
+@dataclass
+class WorkflowRun:
+    run_id: str
+    workflow: str
+    state: str = RunState.PENDING
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    input_commit: str = ""
+    input_snapshot: str = ""
+    output_commit: Optional[str] = None
+    output_records: List[Record] = field(default_factory=list)
+    shard_reports: List[ShardReport] = field(default_factory=list)
+    waiting_task: Optional[str] = None
+    error: str = ""
+    trigger: str = "manual"
+
+    def report(self) -> dict:
+        """The paper's "reports results"."""
+        return {
+            "run_id": self.run_id,
+            "workflow": self.workflow,
+            "state": self.state,
+            "trigger": self.trigger,
+            "duration_s": max(0.0, self.finished_at - self.started_at),
+            "input_commit": self.input_commit,
+            "output_commit": self.output_commit,
+            "n_output_records": len(self.output_records),
+            "shards": [
+                {"shard": s.shard, "attempts": s.attempts,
+                 "speculative": s.speculative, "duration_s": round(s.duration_s, 6),
+                 "in": s.n_in, "out": s.n_out, "error": s.error}
+                for s in self.shard_reports
+            ],
+            "error": self.error,
+        }
+
+
+class WorkflowManager:
+    """Core module #2 of the platform (Fig. 2)."""
+
+    def __init__(self, dm: DatasetManager, worker_slots: int = 8):
+        self.dm = dm
+        self.worker_slots = worker_slots
+        self._workflows: Dict[str, Workflow] = {}
+        self._runs: Dict[str, WorkflowRun] = {}
+        self._parked: Dict[str, Tuple[Workflow, WorkflowRun]] = {}
+        self._timers: List[dict] = []
+        self._lock = threading.Lock()
+        dm.on_commit(self._on_commit)
+
+    # ------------------------------------------------------------ registration
+
+    def register(self, workflow: Workflow) -> None:
+        self._workflows[workflow.name] = workflow
+
+    def workflows(self) -> List[str]:
+        return sorted(self._workflows)
+
+    def runs(self, workflow: Optional[str] = None) -> List[WorkflowRun]:
+        out = list(self._runs.values())
+        if workflow is not None:
+            out = [r for r in out if r.workflow == workflow]
+        return sorted(out, key=lambda r: r.started_at)
+
+    def get_run(self, run_id: str) -> WorkflowRun:
+        return self._runs[run_id]
+
+    # ------------------------------------------------------------ triggers
+
+    def _on_commit(self, dataset: str, commit: Commit) -> None:
+        """Event trigger: new dataset version."""
+        if commit.meta.get("_workflow_output"):
+            return  # don't let a workflow's own output re-trigger it (loops)
+        for wf in list(self._workflows.values()):
+            if wf.trigger_on_commit_to == dataset:
+                self.run(wf.name, trigger=f"event:commit:{dataset}")
+
+    def tick(self, now: Optional[float] = None) -> List[str]:
+        """Advance time-based schedules; returns run ids started.
+
+        Deterministic/manual clock for tests; a daemon thread can call this
+        periodically in production (see :meth:`start_clock`).
+        """
+        now = time.time() if now is None else now
+        started = []
+        for wf in self._workflows.values():
+            if wf.trigger_every_s is None:
+                continue
+            entry = next((t for t in self._timers if t["wf"] == wf.name), None)
+            if entry is None:
+                entry = {"wf": wf.name, "last": now}
+                self._timers.append(entry)
+                continue
+            if now - entry["last"] >= wf.trigger_every_s:
+                entry["last"] = now
+                run = self.run(wf.name, trigger="schedule")
+                started.append(run.run_id)
+        return started
+
+    def start_clock(self, period_s: float = 1.0) -> threading.Thread:
+        stop = threading.Event()
+
+        def loop():
+            while not stop.is_set():
+                self.tick()
+                stop.wait(period_s)
+
+        t = threading.Thread(target=loop, daemon=True)
+        t.stop = stop  # type: ignore[attr-defined]
+        t.start()
+        return t
+
+    # ------------------------------------------------------------ execution
+
+    def run(self, workflow_name: str, trigger: str = "manual") -> WorkflowRun:
+        wf = self._workflows[workflow_name]
+        run = WorkflowRun(run_id=f"run-{uuid.uuid4().hex[:12]}",
+                          workflow=wf.name, trigger=trigger)
+        self._runs[run.run_id] = run
+        self._execute(wf, run)
+        return run
+
+    def resume(self, run_id: str) -> WorkflowRun:
+        """Resume a run parked on a human task (after completion)."""
+        wf, run = self._parked.pop(run_id)
+        self._execute(wf, run)
+        return run
+
+    def _execute(self, wf: Workflow, run: WorkflowRun) -> None:
+        run.state = RunState.RUNNING
+        run.started_at = time.time()
+        lineage = self.dm.lineage
+        try:
+            snap = self.dm.checkout(
+                wf.input_dataset, wf.actor, rev=wf.input_rev,
+                attrs_equal=wf.input_attrs_equal,
+            )
+            run.input_commit = snap.commit_id
+            run.input_snapshot = snap.snapshot_id
+
+            run_node = f"workflow_run:{run.run_id}"
+            lineage.add_node(run_node, NodeKind.WORKFLOW_RUN,
+                             workflow=wf.name,
+                             pipeline=wf.pipeline.fingerprint(),
+                             trigger=run.trigger)
+            lineage.add_edge(snap.snapshot_id, run_node, EdgeKind.INPUT_TO)
+            lineage.flush()
+
+            records = snap.entries()
+            outputs = self._run_sharded(wf, run, snap)
+
+            run.output_records = outputs
+            if wf.output_dataset is not None:
+                commit = self.dm.check_in(
+                    wf.output_dataset, outputs, wf.actor,
+                    message=wf.output_message or f"output of {wf.name}",
+                    derived_from=[snap.snapshot_id],
+                    produced_by=run_node,
+                    meta={"_workflow_output": wf.name, "run_id": run.run_id},
+                )
+                run.output_commit = commit.commit_id
+            run.state = RunState.SUCCEEDED
+        except WaitingForHuman as wfh:
+            run.state = RunState.WAITING_HUMAN
+            run.waiting_task = wfh.task_id
+            self._parked[run.run_id] = (wf, run)
+        except Exception as e:  # noqa: BLE001 - run isolation is the point
+            run.state = RunState.FAILED
+            run.error = f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=4)}"
+        finally:
+            run.finished_at = time.time()
+
+    # -- sharded, fault-tolerant, straggler-mitigated pipeline execution -------
+
+    def _run_sharded(self, wf: Workflow, run: WorkflowRun,
+                     snap: Snapshot) -> List[Record]:
+        entries = snap.entries()
+        n_shards = max(1, min(wf.n_shards, len(entries) or 1))
+        shards: List[List[Record]] = [[] for _ in range(n_shards)]
+        for i, e in enumerate(entries):
+            shards[i % n_shards].append(
+                Record(e.record_id, snap.read(e.record_id), dict(e.attrs)))
+
+        results: Dict[int, List[Record]] = {}
+        reports = {i: ShardReport(shard=i, n_in=len(shards[i]))
+                   for i in range(n_shards)}
+        durations: List[float] = []
+
+        def work(shard_idx: int, speculative: bool) -> Tuple[int, List[Record], float, bool]:
+            t0 = time.time()
+            ctx = RunContext(run_id=run.run_id, shard_index=shard_idx,
+                             n_shards=n_shards)
+            out = wf.pipeline.run(shards[shard_idx], ctx)
+            return shard_idx, out, time.time() - t0, speculative
+
+        with ThreadPoolExecutor(max_workers=self.worker_slots) as pool:
+            pending: Dict[Future, Tuple[int, bool]] = {}
+            attempts = {i: 0 for i in range(n_shards)}
+            launched_spec = set()
+            launch_times: Dict[int, float] = {}
+
+            def launch(i: int, speculative: bool = False):
+                attempts[i] += 1
+                reports[i].attempts += 1
+                launch_times.setdefault(i, time.time())
+                fut = pool.submit(work, i, speculative)
+                pending[fut] = (i, speculative)
+
+            for i in range(n_shards):
+                launch(i)
+
+            while pending:
+                done, _ = wait(list(pending), timeout=wf.min_speculative_wait_s,
+                               return_when=FIRST_COMPLETED)
+                for fut in done:
+                    i, speculative = pending.pop(fut)
+                    if i in results:
+                        continue  # a duplicate already won
+                    try:
+                        idx, out, dt, spec = fut.result()
+                    except WaitingForHuman:
+                        raise
+                    except Exception as e:  # noqa: BLE001
+                        reports[i].error = f"{type(e).__name__}: {e}"
+                        if attempts[i] <= wf.max_retries:
+                            time.sleep(0.01 * (2 ** (attempts[i] - 1)))
+                            launch(i)
+                        else:
+                            raise RuntimeError(
+                                f"shard {i} failed after {attempts[i]} attempts: "
+                                f"{reports[i].error}") from e
+                        continue
+                    results[idx] = out
+                    durations.append(dt)
+                    reports[idx].duration_s = dt
+                    reports[idx].n_out = len(out)
+                    reports[idx].speculative = spec
+
+                # Straggler mitigation: speculative duplicates.
+                if durations and len(results) < n_shards:
+                    med = sorted(durations)[len(durations) // 2]
+                    now = time.time()
+                    for i in range(n_shards):
+                        if (i not in results and i not in launched_spec
+                                and attempts[i] > 0
+                                and now - launch_times.get(i, now)
+                                > max(wf.speculative_factor * med,
+                                      wf.min_speculative_wait_s)):
+                            launched_spec.add(i)
+                            launch(i, speculative=True)
+
+        run.shard_reports = [reports[i] for i in range(n_shards)]
+        out: List[Record] = []
+        for i in range(n_shards):
+            out.extend(results[i])
+        return out

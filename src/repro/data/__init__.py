@@ -1,0 +1,10 @@
+from .components import (ByteTokenizer, DedupComponent,
+                         LengthFilterComponent, PackComponent,
+                         SplitComponent, TokenizeComponent, decode_packed)
+from .loader import LoaderState, ShardedSnapshotLoader
+
+__all__ = [
+    "ByteTokenizer", "DedupComponent", "LengthFilterComponent",
+    "PackComponent", "SplitComponent", "TokenizeComponent", "decode_packed",
+    "LoaderState", "ShardedSnapshotLoader",
+]

@@ -1,0 +1,182 @@
+"""ML-specific pipeline components: tokenize, pack, split, dedup, filter.
+
+These are the paper's "transform the original data to get a derived version
+of the dataset" made concrete for LM training: text records in, fixed-length
+packed token sequences out — the snapshot a training job checks out.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+from typing import Iterable, Iterator, List, Optional
+
+import numpy as np
+
+from ..core.dataset import Record
+from ..core.transforms import Component, RunContext
+
+__all__ = ["ByteTokenizer", "TokenizeComponent", "PackComponent",
+           "SplitComponent", "DedupComponent", "LengthFilterComponent",
+           "decode_packed"]
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+_SPECIALS = 3
+
+
+class ByteTokenizer:
+    """Deterministic byte-level tokenizer (vocab = 256 + specials).
+
+    Production swaps in a learned BPE via the same interface; for platform/
+    training tests a dependency-free reversible tokenizer is the right tool.
+    """
+
+    vocab_size = 256 + _SPECIALS
+
+    def encode(self, text: bytes, add_bos: bool = True,
+               add_eos: bool = True) -> List[int]:
+        ids = [b + _SPECIALS for b in text]
+        if add_bos:
+            ids = [BOS_ID] + ids
+        if add_eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids) -> bytes:
+        return bytes(int(i) - _SPECIALS for i in ids
+                     if int(i) >= _SPECIALS)
+
+
+class TokenizeComponent(Component):
+    """text record -> token-array record (.npy payload)."""
+
+    def __init__(self, tokenizer: Optional[ByteTokenizer] = None,
+                 name: str = "tokenize") -> None:
+        super().__init__(name=name)
+        self.tok = tokenizer or ByteTokenizer()
+
+    def process(self, records, ctx: RunContext) -> Iterator[Record]:
+        for rec in records:
+            ids = np.asarray(self.tok.encode(rec.data), np.int32)
+            buf = io.BytesIO()
+            np.save(buf, ids, allow_pickle=False)
+            ctx.bump(f"{self.name}.tokens", float(ids.size))
+            yield Record(rec.record_id, buf.getvalue(),
+                         {**rec.attrs, "n_tokens": int(ids.size),
+                          "format": "tokens.npy"})
+
+
+class PackComponent(Component):
+    """Token records -> packed fixed-length sequences with segment ids.
+
+    Documents are concatenated greedily; each output record holds
+    ``tokens``, ``segments`` (per-token document index within the pack) and
+    ``positions`` (restarting at each document) plus the source record ids
+    (lineage at *record* granularity: revoking a source doc identifies the
+    packs that contain it).
+    """
+
+    def __init__(self, seq_len: int, name: str = "pack") -> None:
+        super().__init__(name=name, seq_len=seq_len)
+        self.seq_len = seq_len
+
+    def process(self, records, ctx: RunContext) -> Iterator[Record]:
+        L = self.seq_len + 1          # +1 so tokens/labels both get seq_len
+        buf_tokens: List[int] = []
+        buf_segments: List[int] = []
+        buf_positions: List[int] = []
+        buf_sources: List[str] = []
+        seg = 0
+        out_idx = 0
+
+        def flush():
+            nonlocal buf_tokens, buf_segments, buf_positions, buf_sources, \
+                seg, out_idx
+            toks = np.asarray(buf_tokens[:L], np.int32)
+            segs = np.asarray(buf_segments[:L], np.int32)
+            pos = np.asarray(buf_positions[:L], np.int32)
+            if toks.size < L:
+                pad = L - toks.size
+                toks = np.pad(toks, (0, pad), constant_values=PAD_ID)
+                segs = np.pad(segs, (0, pad), constant_values=-1)
+                pos = np.pad(pos, (0, pad))
+            payload = io.BytesIO()
+            np.savez(payload, tokens=toks, segments=segs, positions=pos)
+            rec = Record(
+                f"pack-{ctx.shard_index:03d}-{out_idx:06d}", payload.getvalue(),
+                {"format": "packed.npz", "seq_len": self.seq_len,
+                 "sources": json.dumps(buf_sources)})
+            buf_tokens = buf_tokens[L:]
+            buf_segments = buf_segments[L:]
+            buf_positions = buf_positions[L:]
+            buf_sources = []
+            out_idx += 1
+            return rec
+
+        for rec in records:
+            ids = np.load(io.BytesIO(rec.data), allow_pickle=False)
+            buf_tokens.extend(int(i) for i in ids)
+            buf_segments.extend([seg] * ids.size)
+            buf_positions.extend(range(ids.size))
+            buf_sources.append(rec.record_id)
+            seg += 1
+            while len(buf_tokens) >= L:
+                ctx.bump(f"{self.name}.packs")
+                yield flush()
+        if buf_tokens:
+            ctx.bump(f"{self.name}.packs")
+            yield flush()
+
+
+class SplitComponent(Component):
+    """Deterministically assign split attrs by record-id hash."""
+
+    def __init__(self, eval_fraction: float = 0.05, name: str = "split"):
+        super().__init__(name=name, eval_fraction=eval_fraction)
+        self.eval_fraction = eval_fraction
+
+    def process(self, records, ctx):
+        for rec in records:
+            h = int(hashlib.sha256(rec.record_id.encode()).hexdigest()[:8], 16)
+            split = "eval" if (h % 10_000) < self.eval_fraction * 10_000 \
+                else "train"
+            yield Record(rec.record_id, rec.data, {**rec.attrs, "split": split})
+
+
+class DedupComponent(Component):
+    """Exact-content dedup (content hash) — classic data-cleanup stage."""
+
+    def __init__(self, name: str = "dedup"):
+        super().__init__(name=name)
+
+    def process(self, records, ctx):
+        seen = set()
+        for rec in records:
+            h = hashlib.sha256(rec.data).hexdigest()
+            if h in seen:
+                ctx.bump(f"{self.name}.dropped")
+                continue
+            seen.add(h)
+            yield rec
+
+
+class LengthFilterComponent(Component):
+    def __init__(self, min_bytes: int = 1, max_bytes: int = 1 << 20,
+                 name: str = "length_filter"):
+        super().__init__(name=name, min_bytes=min_bytes, max_bytes=max_bytes)
+        self.min_bytes, self.max_bytes = min_bytes, max_bytes
+
+    def process(self, records, ctx):
+        for rec in records:
+            if self.min_bytes <= len(rec.data) <= self.max_bytes:
+                yield rec
+            else:
+                ctx.bump(f"{self.name}.dropped")
+
+
+def decode_packed(data: bytes):
+    z = np.load(io.BytesIO(data), allow_pickle=False)
+    return z["tokens"], z["segments"], z["positions"]

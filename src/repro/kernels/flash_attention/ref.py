@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for flash attention (naive, materializes scores).
+
+This is the correctness reference every other implementation (Pallas
+kernel, chunked-XLA) is tested against.  fp32 softmax, GQA, causal /
+sliding-window / softcap / segment (packed-sequence) masking.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_reference"]
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jnp.ndarray,              # (B, Sq, Hq, D)
+    k: jnp.ndarray,              # (B, Sk, Hkv, D)
+    v: jnp.ndarray,              # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_segments: Optional[jnp.ndarray] = None,   # (B, Sq) int32
+    kv_segments: Optional[jnp.ndarray] = None,  # (B, Sk) int32
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    # GQA: expand kv heads to q heads.
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    q_pos = jnp.arange(Sq) + q_offset              # absolute positions
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    mask4 = mask[None, None, :, :]
+    if q_segments is not None and kv_segments is not None:
+        seg = q_segments[:, None, :, None] == kv_segments[:, None, None, :]
+        mask4 = mask4 & seg
+
+    scores = jnp.where(mask4, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # Fully-masked rows (can happen with segments) -> zero output.
+    any_valid = mask4.any(axis=-1, keepdims=True)
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

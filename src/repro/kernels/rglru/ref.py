@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the RG-LRU (Real-Gated Linear Recurrent Unit,
+Griffin / RecurrentGemma).
+
+    log_a_t = -c * softplus(Lambda) * sigmoid(r_t)          (per channel)
+    a_t     = exp(log_a_t)
+    h_t     = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(i_t) * x_t)
+
+x, r, i: (B, S, W); Lambda: (W,).  c = 8 (paper constant).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_reference", "rglru_step_reference", "RGLRU_C"]
+
+RGLRU_C = 8.0
+
+
+def _gates(x, r, i, lam):
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * jax.nn.sigmoid(
+        r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # multiplier uses log-space for stability: sqrt(1 - a^2)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    gated_x = jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+    return a, mult * gated_x
+
+
+def rglru_reference(
+    x: jnp.ndarray,                     # (B, S, W)
+    r: jnp.ndarray,                     # (B, S, W) pre-sigmoid recurrence gate
+    i: jnp.ndarray,                     # (B, S, W) pre-sigmoid input gate
+    lam: jnp.ndarray,                   # (W,)
+    initial_h: Optional[jnp.ndarray] = None,   # (B, W) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B, S, W), final_h: (B, W) f32)."""
+    B, S, W = x.shape
+    a, u = _gates(x, r, i, lam.astype(jnp.float32))
+    h0 = (jnp.zeros((B, W), jnp.float32) if initial_h is None
+          else initial_h.astype(jnp.float32))
+
+    def step(h, inputs):
+        a_t, u_t = inputs
+        h = a_t * h + u_t
+        return h, h
+
+    final, ys = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                        u.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), final
+
+
+def rglru_step_reference(
+    h: jnp.ndarray,                     # (B, W) f32
+    x_t: jnp.ndarray,                   # (B, W)
+    r_t: jnp.ndarray,
+    i_t: jnp.ndarray,
+    lam: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a, u = _gates(x_t, r_t, i_t, lam.astype(jnp.float32))
+    h = a * h.astype(jnp.float32) + u
+    return h.astype(x_t.dtype), h

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for chunked SSD (Mamba-2, state-space duality).
+
+The SSD insight: the recurrence
+
+    s_t = a_t s_{t-1} + x_t B_t^T ,   y_t = C_t s_t
+
+is, within a chunk of length c, a *matmul*:
+
+    y = (C B^T ⊙ M) x  +  exp(cumlog_a) * (C s_0^T)
+    M[t, r] = exp(la_t - la_r)  for r <= t, else 0        (la = cumsum log a)
+
+so the TPU-native formulation is: grid (B, H, n_chunks) with the chunk
+dimension sequential ("arbitrary"), the running state (P, N) living in fp32
+VMEM scratch across chunk iterations, and both the intra-chunk (c x c)(c x P)
+and state (c x N)(N x P) products on the MXU.  All decay weights are <= 1
+(a in (0,1]) so the blocked form is numerically stable in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_pallas"]
+
+
+def _ssd_kernel(
+    x_ref,         # (1, c, 1, P)
+    a_ref,         # (1, c, 1)
+    b_ref,         # (1, c, N)
+    c_ref,         # (1, c, N)
+    s0_ref,        # (1, 1, P, N)  initial state for this (b, h)
+    y_ref,         # (1, c, 1, P)
+    sfin_ref,      # (1, 1, P, N)  final state out
+    state_scr,     # (P, N) f32 scratch
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (c, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)             # (c,)
+    bm = b_ref[0].astype(jnp.float32)                  # (c, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (c, N)
+
+    la = jnp.cumsum(jnp.log(a))                        # (c,)
+    total = la[-1]
+
+    # Intra-chunk: (C B^T ⊙ M) X on the MXU.
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (c, c)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    r_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(la[:, None] - la[None, :])
+    m = jnp.where(t_idx >= r_idx, decay, 0.0)
+    y = jax.lax.dot_general(scores * m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (c, P)
+
+    # Inter-chunk: contribution of the carried state.
+    state = state_scr[...]                                            # (P, N)
+    y += jnp.exp(la)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                           # (c, P)
+
+    # State update: s' = exp(total) s + sum_t exp(total - la_t) x_t B_t^T.
+    w = jnp.exp(total - la)                                           # (c,)
+    state_new = jnp.exp(total) * state + jax.lax.dot_general(
+        x * w[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                           # (P, N)
+    state_scr[...] = state_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sfin_ref[0, 0] = state_new.astype(sfin_ref.dtype)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,                     # (B, S, H, P)
+    a: jnp.ndarray,                     # (B, S, H)
+    B_mat: jnp.ndarray,                 # (B, S, N)
+    C_mat: jnp.ndarray,                 # (B, S, N)
+    initial_state: jnp.ndarray,         # (B, H, P, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Bsz, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    s0 = initial_state.reshape(Bsz, H, 1, P, N)  # extra dim for blocking
+
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, ci: (b, h, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, a, B_mat, C_mat, s0)
+    return y, sfin

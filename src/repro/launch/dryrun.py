@@ -1,0 +1,540 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count at first init), which is why the module docstring follows.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step, in_shardings=..., out_shardings=...)
+.lower(**ShapeDtypeStructs).compile()`` must succeed on the production
+meshes (16x16 single-pod; 2x16x16 multi-pod), and the compiled artifact
+yields ``memory_analysis()`` (fits?) + ``cost_analysis()`` (FLOPs/bytes)
+plus the collective inventory for §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen2.5-32b --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --out artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, cell_runnable, get_config
+from ..models import build_model
+from ..train.sharding import (ActivationSharding, ShardingRules, batch_specs,
+                              cache_specs, named, opt_state_specs,
+                              param_specs)
+from ..train.step import make_train_step
+from .hlo_analysis import HW, parse_collectives, roofline_terms
+from .mesh import make_production_mesh
+from .specs import (input_specs, runtime_for, serve_token_specs,
+                    train_config_for)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _mesh_tag(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)
+
+
+def _data_parallel(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def build_train_lowering(cfg, shape, mesh, rules, rt_overrides=None,
+                         tc_overrides=None):
+    rt = runtime_for(cfg, shape, act_sharding=ActivationSharding(rules),
+                     **(rt_overrides or {}))
+    model = build_model(cfg, rt)
+    params_abs = model.init_abstract()
+    pspecs = param_specs(params_abs, rules)
+    tc = train_config_for(cfg, shape, _data_parallel(mesh))
+    if tc_overrides:
+        tc = dataclasses.replace(tc, **tc_overrides)
+    from ..train.optimizer import make_optimizer
+
+    opt = make_optimizer(tc.optimizer)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    ospecs = opt_state_specs(opt_abs, params_abs, pspecs, rules)
+    batch_abs = input_specs(cfg, shape)
+    bspecs = batch_specs(batch_abs, rules)
+
+    step = make_train_step(model, tc)
+    jitted = jax.jit(
+        step,
+        in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                      named(mesh, bspecs)),
+        out_shardings=(named(mesh, pspecs), named(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+    lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    return lowered, {"microbatches": tc.microbatches,
+                     "optimizer": tc.optimizer.name,
+                     "step_kind": "train_step"}
+
+
+def build_prefill_lowering(cfg, shape, mesh, rules, rt_overrides=None):
+    rt = runtime_for(cfg, shape, max_cache_len=shape.seq_len,
+                     act_sharding=ActivationSharding(rules),
+                     **(rt_overrides or {}))
+    model = build_model(cfg, rt)
+    params_abs = model.init_abstract()
+    pspecs = param_specs(params_abs, rules)
+    B, S = shape.global_batch, shape.seq_len
+    b_axes = rules.batch_spec_axes(B)
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.is_encoder_decoder:
+        frames = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        tokens = SDS((B, S), jnp.int32)
+
+        def fn(params, frames, tokens):
+            return model.prefill(params, frames, tokens)
+
+        in_sh = (named(mesh, pspecs),
+                 named(mesh, P(b_axes, None, None)),
+                 named(mesh, P(b_axes, None)))
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(
+            params_abs, frames, tokens)
+    elif cfg.frontend == "vision":
+        Pf = cfg.frontend_tokens
+        tokens = SDS((B, S - Pf), jnp.int32)
+        fe = SDS((B, Pf, cfg.d_model), jnp.bfloat16)
+
+        def fn(params, tokens, fe):
+            return model.prefill(params, tokens, fe)
+
+        in_sh = (named(mesh, pspecs), named(mesh, P(b_axes, None)),
+                 named(mesh, P(b_axes, None, None)))
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(
+            params_abs, tokens, fe)
+    else:
+        tokens = SDS((B, S), jnp.int32)
+
+        def fn(params, tokens):
+            return model.prefill(params, tokens, None)
+
+        in_sh = (named(mesh, pspecs), named(mesh, P(b_axes, None)))
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(params_abs, tokens)
+    return lowered, {"step_kind": "prefill"}
+
+
+def build_decode_lowering(cfg, shape, mesh, rules, rt_overrides=None):
+    rt = runtime_for(cfg, shape, max_cache_len=shape.seq_len,
+                     act_sharding=ActivationSharding(rules),
+                     **(rt_overrides or {}))
+    model = build_model(cfg, rt)
+    params_abs = model.init_abstract()
+    pspecs = param_specs(params_abs, rules)
+    B, S = shape.global_batch, shape.seq_len
+    token_abs, pos_abs = serve_token_specs(cfg, shape)
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.is_encoder_decoder:
+        from ..models.attention import init_kv_cache
+
+        enc_abs = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        cache_abs = jax.eval_shape(
+            lambda p, e: {
+                "self": jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[init_kv_cache(cfg, B, rt.max_cache_len,
+                                    rt.compute_dtype)
+                      for _ in range(cfg.n_layers)]),
+                "cross": model._cross_kv(p["decoder"], e),
+            }, params_abs, enc_abs)
+    else:
+        cache_abs = jax.eval_shape(lambda: model.init_cache(B))
+    cspecs = cache_specs(cache_abs, rules, B)
+    b_axes = rules.batch_spec_axes(B)
+
+    def fn(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                      named(mesh, P(b_axes, None)), None),
+        out_shardings=(None, named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    lowered = jitted.lower(params_abs, cache_abs, token_abs, pos_abs)
+    return lowered, {"step_kind": "decode_step"}
+
+
+def run_cell(arch: str, shape_name: str, mesh, rules=None,
+             rt_overrides=None, tc_overrides=None,
+             hw: HW = HW()) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run / §Roofline record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = cell_runnable(arch, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(mesh),
+        "runnable": cell.runnable, "skip_reason": cell.skip_reason,
+    }
+    if not cell.runnable:
+        rec["status"] = "skipped"
+        return rec
+    rules = rules or ShardingRules(mesh)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, meta = build_train_lowering(
+                cfg, shape, mesh, rules, rt_overrides, tc_overrides)
+        elif shape.kind == "prefill":
+            lowered, meta = build_prefill_lowering(
+                cfg, shape, mesh, rules, rt_overrides)
+        else:
+            lowered, meta = build_decode_lowering(
+                cfg, shape, mesh, rules, rt_overrides)
+        rec.update(meta)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ca = compiled.cost_analysis() or {}
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_estimate_bytes": int(
+                    ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            }
+        colls = parse_collectives(compiled.as_text())
+        rec["collectives"] = colls.to_json()
+        rec["roofline"] = roofline_terms(
+            rec["hlo_flops"], rec["hlo_bytes"], colls.total_wire_bytes, hw)
+        n_dev = mesh.devices.size
+        _add_model_terms(rec, cfg, shape, n_dev, hw)
+        model_flops = model_flops_for(cfg, shape)
+        rec["model_flops_global"] = model_flops
+        rec["model_flops_per_device"] = model_flops / n_dev
+        if rec["hlo_flops"] > 0:
+            rec["useful_flops_ratio"] = (
+                rec["model_flops_per_device"] / rec["hlo_flops"])
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 - record, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+    return rec
+
+
+def _reduced_cfg(cfg, n_superblocks: int):
+    """cfg with n_superblocks repeats of the layer pattern (no tail)."""
+    k = len(cfg.pattern)
+    kw = {"n_layers": k * n_superblocks}
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = n_superblocks
+        kw["n_layers"] = n_superblocks
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell_roofline(arch: str, shape_name: str, mesh, rules=None,
+                      rt_overrides=None, hw: HW = HW()) -> Dict[str, Any]:
+    """Accurate roofline terms via 2-point layer extrapolation.
+
+    ``cost_analysis()`` counts a ``lax.scan`` body ONCE regardless of trip
+    count, so scanned lowerings under-report per-step FLOPs/bytes/collective
+    traffic.  Instead we lower UNROLLED graphs with 1 and 2 superblocks
+    (microbatches=1), take the difference as the exact per-superblock cost,
+    and extrapolate linearly to the full depth:
+
+        est(X) = X(1) + (X(2) - X(1)) * (n_layers/k - 1)
+
+    The non-layer part (embed, logits, loss, optimizer) is captured at full
+    size in the 1-superblock lowering.  Linear-in-depth holds exactly for
+    transformer stacks (every superblock does identical work).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell = cell_runnable(arch, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(mesh),
+        "runnable": cell.runnable, "skip_reason": cell.skip_reason,
+        "method": "2-point layer extrapolation (unrolled, micro=1)",
+    }
+    if not cell.runnable:
+        rec["status"] = "skipped"
+        return rec
+    rules = rules or ShardingRules(mesh)
+    rt_o = dict(rt_overrides or {})
+    rt_o["scan_layers"] = False
+    # Single-block flash: the chunked XLA path hides its inner kv/q loops in
+    # lax.scan bodies that cost_analysis counts ONCE; one big block makes the
+    # attention HLO explicit so its FLOPs/bytes are counted exactly.  (For
+    # windowed layers this over-counts vs a block-skipping kernel — the
+    # analytic MODEL_FLOPS column uses the true window; see EXPERIMENTS.md.)
+    rt_o.setdefault("attn_block_q", shape.seq_len)
+    rt_o.setdefault("attn_block_k", shape.seq_len)
+    k = len(cfg.pattern)
+    reps = cfg.n_layers / k if not cfg.is_encoder_decoder else cfg.n_layers
+    try:
+        points = []
+        for n_sb in (1, 2):
+            sub = _reduced_cfg(cfg, n_sb)
+            if shape.kind == "train":
+                lowered, _ = build_train_lowering(
+                    sub, shape, mesh, rules, rt_o,
+                    tc_overrides={"microbatches": 1})
+            elif shape.kind == "prefill":
+                lowered, _ = build_prefill_lowering(
+                    sub, shape, mesh, rules, rt_o)
+            else:
+                lowered, _ = build_decode_lowering(
+                    sub, shape, mesh, rules, rt_o)
+            t0 = time.time()
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            colls = parse_collectives(compiled.as_text())
+            points.append({
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "wire": colls.total_wire_bytes,
+                "coll_counts": colls.counts,
+                "compile_s": round(time.time() - t0, 2),
+            })
+        p1, p2 = points
+
+        def extrap(key):
+            return p1[key] + (p2[key] - p1[key]) * (reps - 1)
+
+        rec["per_superblock"] = {
+            "flops": p2["flops"] - p1["flops"],
+            "bytes": p2["bytes"] - p1["bytes"],
+            "wire": p2["wire"] - p1["wire"],
+        }
+        rec["points"] = points
+        rec["hlo_flops"] = extrap("flops")
+        rec["hlo_bytes"] = extrap("bytes")
+        rec["wire_bytes"] = extrap("wire")
+        rec["roofline"] = roofline_terms(
+            rec["hlo_flops"], rec["hlo_bytes"], rec["wire_bytes"], hw)
+        n_dev = mesh.devices.size
+        _add_model_terms(rec, cfg, shape, n_dev, hw)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+    return rec
+
+
+def _add_model_terms(rec, cfg, shape, n_dev, hw):
+    """Model-side accounting: useful flops, analytic memory bound, and
+    roofline fractions against both the HLO and analytic bounds."""
+    model_flops = model_flops_for(cfg, shape)
+    rec["model_flops_global"] = model_flops
+    rec["model_flops_per_device"] = model_flops / n_dev
+    mem_model = model_memory_bytes(cfg, shape, n_dev)
+    r = rec["roofline"]
+    r["memory_model_s"] = mem_model / hw.hbm_bw
+    r["bound_model_s"] = max(r["compute_s"], r["memory_model_s"],
+                             r["collective_s"])
+    r["dominant_model"] = max(
+        ("compute", r["compute_s"]), ("memory", r["memory_model_s"]),
+        ("collective", r["collective_s"]), key=lambda kv: kv[1])[0]
+    if rec["hlo_flops"] > 0:
+        rec["useful_flops_ratio"] = (
+            rec["model_flops_per_device"] / rec["hlo_flops"])
+        ideal_s = rec["model_flops_per_device"] / hw.peak_flops
+        rec["roofline_fraction"] = ideal_s / max(r["bound_s"], 1e-12)
+        rec["roofline_fraction_model"] = ideal_s / max(
+            r["bound_model_s"], 1e-12)
+
+
+def model_memory_bytes(cfg, shape, n_dev: int) -> float:
+    """Analytic per-device HBM traffic (bytes/step) — the fusion-ideal
+    LOWER bound companion to the HLO ``bytes accessed`` UPPER bound (the
+    CPU backend fuses less than TPU, inflating the HLO number).
+
+    Inventory (documented in EXPERIMENTS.md §Roofline):
+    - weights: fully sharded; train reads them 3x (fwd, remat fwd, bwd) +
+      grad write/read + optimizer state read/write; prefill/decode 1x.
+    - activations: residual stream + mlp/attn intermediates,
+      ~(8*d_model + 3*d_ff_eff + heads) per token per layer, x4 train
+      (fwd+remat+bwd write/read), x1.5 inference.
+    - logits: tokens x padded_vocab x 4B x 3 / tp (sharded over tp=16).
+    - decode adds the KV/state cache read+write.
+    """
+    pb = 2 if cfg.n_params() > 5e9 else 4
+    P_tot, P_act = cfg.n_params(), cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    tp = 16
+    opt_b = 6 if P_tot > 1e11 else 20
+    if shape.kind == "train":
+        tokens_loc = B * S / max(n_dev // tp, 1)
+        weights = P_tot * (3 * pb + 8 + opt_b) / n_dev
+    elif shape.kind == "prefill":
+        tokens_loc = B * S / max(n_dev // tp, 1)
+        weights = P_tot * pb / n_dev
+    else:
+        tokens_loc = max(B / max(n_dev // tp, 1), 1)
+        weights = P_act * pb / n_dev
+    d_ff_eff = cfg.d_ff + (cfg.experts_per_token * cfg.moe_d_ff
+                           if cfg.n_experts else 0)
+    attn_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+    per_tok_layer = (8 * cfg.d_model + 3 * d_ff_eff + attn_dim) * 2
+    act_factor = 4.0 if shape.kind == "train" else 1.5
+    n_layers = cfg.n_layers + (cfg.n_encoder_layers or 0)
+    acts = tokens_loc * per_tok_layer * n_layers * act_factor / tp
+    logits = tokens_loc * cfg.padded_vocab * 4 * 3 / tp
+    cache = 0.0
+    if shape.kind == "decode":
+        ctx = min(S, cfg.sliding_window or S)
+        if cfg.local_window:
+            ctx = min(ctx, max(cfg.local_window,
+                               S if "global" in cfg.pattern else 0)) or ctx
+        kv_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * 2
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.pattern[i % len(cfg.pattern)]
+                     in ("attn", "local", "global"))
+        cache = (B / max(n_dev // tp, 1)) * ctx * kv_per_tok * n_attn / tp
+        if cfg.family == "ssm":
+            cache = (B / max(n_dev // tp, 1)) * cfg.n_layers * \
+                cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 * 2 / tp
+    return weights + acts + logits + cache
+
+
+def _layer_window(cfg, kind: str):
+    if kind == "local":
+        return cfg.local_window
+    if kind in ("attn", "global"):
+        return cfg.sliding_window
+    return None
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active per train token, 2*N_active per inference
+    token, plus the attention term 4*H*dh*avg_ctx per token per attention
+    layer (avg_ctx respects each layer kind's window)."""
+    n_active = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * n_active * tokens
+    else:
+        tokens = B  # one new token per sequence
+        base = 2.0 * n_active * tokens
+    if cfg.n_heads:
+        dh, Hq = cfg.head_dim, cfg.n_heads
+        bwd = 3.0 if shape.kind == "train" else 1.0
+        for i in range(cfg.n_layers):
+            kind = cfg.pattern[i % len(cfg.pattern)]
+            if kind not in ("attn", "local", "global"):
+                continue
+            w = _layer_window(cfg, kind)
+            if shape.kind == "decode":
+                ctx = min(S, w) if w else S
+                base += 4.0 * Hq * dh * ctx * B
+            else:
+                weff = min(w, S) if w else S
+                avg_ctx = weff * (S - weff / 2.0) / S  # ->S/2 full, ->w long
+                base += bwd * 4.0 * Hq * dh * avg_ctx * B * S
+    return base
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="2-point extrapolated roofline instead of the "
+                         "full-depth compile-validation cell")
+    ap.add_argument("--layout", default="baseline",
+                    help="baseline | seqpar | zero3 | moe_ep | auto "
+                         "(hillclimbed presets, see launch/presets.py)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    kind = "roofline" if args.roofline else "dryrun"
+    for mesh in meshes:
+        tag = _mesh_tag(mesh)
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{tag}"
+                    + ("__roofline" if args.roofline else "") + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {path}")
+                    continue
+                print(f"=== [{kind}] {arch} x {shape_name} on {tag} ===",
+                      flush=True)
+                rules = rt_o = tc_o = None
+                if args.layout != "baseline":
+                    from .presets import resolve_layout
+
+                    rules, rt_o, tc_o = resolve_layout(
+                        get_config(arch), SHAPES[shape_name], mesh,
+                        args.layout)
+                rec = (run_cell_roofline(arch, shape_name, mesh,
+                                         rules=rules, rt_overrides=rt_o)
+                       if args.roofline else
+                       run_cell(arch, shape_name, mesh, rules=rules,
+                                rt_overrides=rt_o, tc_overrides=tc_o))
+                rec["layout"] = args.layout
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    mem = rec.get("memory", {})
+                    extra = (f" dominant={r['dominant']}"
+                             f" compute={r['compute_s']:.4f}s"
+                             f" memory={r['memory_s']:.4f}s"
+                             f" coll={r['collective_s']:.4f}s")
+                    if mem:
+                        extra += (" peak="
+                                  f"{mem.get('peak_estimate_bytes', 0)/2**30:.2f}GiB")
+                    if "roofline_fraction" in rec:
+                        extra += f" roofline_frac={rec['roofline_fraction']:.3f}"
+                    if "compile_s" in rec:
+                        extra += f" compile={rec['compile_s']}s"
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"    -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Compiled-HLO analysis: collective inventory + roofline terms.
+
+``cost_analysis()`` gives per-device HLO FLOPs and bytes; collective traffic
+is NOT in there, so we parse the post-SPMD compiled HLO text and sum the
+bytes each collective moves per device:
+
+    all-gather:          result_bytes * (n-1)/n      (data received)
+    all-reduce:          2 * in_bytes * (n-1)/n      (ring: RS + AG phases)
+    reduce-scatter:      in_bytes * (n-1)/n
+    all-to-all:          result_bytes * (n-1)/n
+    collective-permute:  result_bytes
+
+where n = participants per replica group (parsed from ``replica_groups``).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link (per direction)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    total_wire_bytes: float = 0.0       # per-device bytes on the wire
+    lines: List[str] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {"counts": self.counts, "bytes_by_kind": self.bytes_by_kind,
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def parse_collectives(hlo_text: str, keep_lines: int = 0) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pairs: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(shapes_str)
+        n = _group_size(line)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * result_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (n - 1)   # input = result * n
+        elif kind == "all-gather":
+            wire = result_bytes * frac
+        elif kind == "all-to-all":
+            wire = result_bytes * frac
+        else:                               # collective-permute
+            wire = float(result_bytes)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + wire
+        stats.total_wire_bytes += wire
+        if keep_lines and len(stats.lines) < keep_lines:
+            stats.lines.append(line.strip()[:200])
+    return stats
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    wire_bytes: float,
+    hw: HW = HW(),
+    n_links: int = 4,
+) -> Dict[str, float]:
+    """Three per-device roofline terms in seconds.
+
+    ``hlo_flops``/``hlo_bytes`` come from cost_analysis() (already
+    per-device after SPMD partitioning); ``wire_bytes`` from
+    :func:`parse_collectives`.  ``n_links`` ~ ICI links per chip on a v5e
+    torus (4: +x, -x, +y, -y usable concurrently for ring collectives).
+    """
+    compute_s = hlo_flops / hw.peak_flops
+    memory_s = hlo_bytes / hw.hbm_bw
+    collective_s = wire_bytes / (hw.ici_bw * n_links)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: 256 TPU v5e chips as (16, 16) over ("data", "model").
+Multi-pod: 2 pods = 512 chips as (2, 16, 16) over ("pod", "data", "model")
+— the "pod" axis maps to DCN; pure data parallelism crosses it.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a 1-D data mesh (CPU tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=_auto(1))

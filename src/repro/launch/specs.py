@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation), plus
+per-cell runtime/optimizer/microbatch policy.
+
+``input_specs(cfg, shape)`` mirrors what the data pipeline emits for that
+architecture family; the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import RuntimeConfig
+from ..train.optimizer import OptimizerConfig
+from ..train.step import TrainConfig
+
+__all__ = ["input_specs", "runtime_for", "train_config_for",
+           "pick_microbatches"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training-batch stand-ins: {tokens, labels, segments, positions,
+    [frontend_embeds]} sized for (arch x shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb = jnp.bfloat16
+    if cfg.is_encoder_decoder:
+        return {
+            "tokens": SDS((B, S), i32),
+            "labels": SDS((B, S), i32),
+            "frontend_embeds": SDS((B, S, cfg.d_model), emb),
+        }
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        P = cfg.frontend_tokens
+        S_text = S - P
+        batch["frontend_embeds"] = SDS((B, P, cfg.d_model), emb)
+        batch["tokens"] = SDS((B, S_text), i32)
+        batch["labels"] = SDS((B, S_text), i32)
+        batch["segments"] = SDS((B, S), i32)     # full length (prefix incl.)
+        batch["positions"] = SDS((B, S), i32)
+    else:
+        batch["tokens"] = SDS((B, S), i32)
+        batch["labels"] = SDS((B, S), i32)
+        batch["segments"] = SDS((B, S), i32)
+        batch["positions"] = SDS((B, S), i32)
+    return batch
+
+
+def serve_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return SDS((B, 1), jnp.int32), SDS((), jnp.int32)
+
+
+def runtime_for(cfg: ModelConfig, shape: ShapeConfig,
+                **overrides) -> RuntimeConfig:
+    big = cfg.n_params() > 5e9
+    rt = RuntimeConfig(
+        param_dtype=jnp.bfloat16 if big else jnp.float32,
+        compute_dtype=jnp.bfloat16,
+        attn_impl="xla",             # chunked flash (CPU dry-run lowering)
+        ssd_impl="xla",
+        rglru_impl="xla",
+        remat="full" if shape.kind == "train" else "none",
+        scan_layers=True,
+        attn_block_q=512,
+        attn_block_k=1024,
+        moe_group_size=512,
+        max_cache_len=shape.seq_len if shape.kind == "decode" else shape.seq_len,
+    )
+    return rt.with_(**overrides) if overrides else rt
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      data_parallel: int) -> int:
+    """Per-device-per-microbatch token target keeps activations in HBM."""
+    if shape.kind != "train":
+        return 1
+    b_loc = max(1, shape.global_batch // data_parallel)
+    tokens_loc = b_loc * shape.seq_len
+    n = cfg.n_params()
+    target = 8_192 if n > 2e10 else 16_384
+    micro = max(1, tokens_loc // target)
+    micro = min(micro, b_loc)
+    while b_loc % micro:
+        micro -= 1
+    return micro
+
+
+def train_config_for(cfg: ModelConfig, shape: ShapeConfig,
+                     data_parallel: int, **opt_overrides) -> TrainConfig:
+    n = cfg.n_params()
+    opt = OptimizerConfig(
+        name="adafactor" if n > 1e11 else "adamw",
+        lr=3e-4, grad_clip=1.0,
+        **opt_overrides,
+    )
+    return TrainConfig(
+        optimizer=opt,
+        microbatches=pick_microbatches(cfg, shape, data_parallel),
+    )

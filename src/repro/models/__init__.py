@@ -1,0 +1,14 @@
+"""Model zoo facade: ``build_model(cfg, rt)`` returns the right family."""
+
+from ..configs.base import ModelConfig
+from .common import RuntimeConfig
+from .decoder import DecoderLM
+from .encdec import EncDecLM
+
+__all__ = ["build_model", "DecoderLM", "EncDecLM", "RuntimeConfig"]
+
+
+def build_model(cfg: ModelConfig, rt: RuntimeConfig = RuntimeConfig()):
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, rt)
+    return DecoderLM(cfg, rt)

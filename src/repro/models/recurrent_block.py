@@ -1,0 +1,86 @@
+"""RecurrentGemma (Griffin) recurrent block.
+
+Two branches from the input:
+  a) linear -> short depthwise causal conv -> RG-LRU
+  b) linear -> GeLU
+merged as out_proj(a * b).  The RG-LRU gates (r, i) are linear functions of
+the post-conv branch input.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.rglru import rglru, rglru_step
+from .common import Initializer, RuntimeConfig
+
+__all__ = ["rec_init", "rec_apply", "rec_decode", "init_rec_cache"]
+
+
+def rec_init(ini: Initializer, cfg: ModelConfig, dtype) -> Dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "in_x": ini.normal((D, W), D ** -0.5, dtype),      # recurrent branch
+        "in_y": ini.normal((D, W), D ** -0.5, dtype),      # gate branch
+        "conv_w": ini.normal((cfg.ssm_conv_width, W), 0.2, dtype),
+        "conv_b": ini.zeros((W,), dtype),
+        "gate_r": ini.normal((W, W), W ** -0.5, dtype),
+        "gate_i": ini.normal((W, W), W ** -0.5, dtype),
+        "lam": ini.normal((W,), 0.5, jnp.float32) + 1.0,
+        "out": ini.normal((W, D), W ** -0.5, dtype),
+    }
+
+
+def _conv(conv_w, conv_b, x, conv_state=None):
+    Wd = conv_w.shape[0]
+    pad = (conv_state if conv_state is not None
+           else jnp.zeros((x.shape[0], Wd - 1, x.shape[-1]), x.dtype))
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(Wd))
+    return out + conv_b[None, None, :], full[:, -(Wd - 1):, :]
+
+
+def rec_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+              rt: RuntimeConfig, initial: Optional[Dict] = None,
+              return_state: bool = False):
+    bx = x @ params["in_x"].astype(x.dtype)
+    by = jax.nn.gelu(x @ params["in_y"].astype(x.dtype))
+    conv_in = initial["conv"] if initial is not None else None
+    bx, conv_state = _conv(params["conv_w"].astype(x.dtype),
+                           params["conv_b"].astype(x.dtype), bx, conv_in)
+    r = bx @ params["gate_r"].astype(x.dtype)
+    i = bx @ params["gate_i"].astype(x.dtype)
+    h0 = initial["h"] if initial is not None else None
+    y, h = rglru(bx, r, i, params["lam"], h0, impl=rt.rglru_impl)
+    out = (y * by) @ params["out"].astype(x.dtype)
+    if return_state:
+        return out, {"h": h, "conv": conv_state}
+    return out
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, W), dtype),
+    }
+
+
+def rec_decode(params: Dict, x_t: jnp.ndarray, cache: Dict,
+               cfg: ModelConfig, rt: RuntimeConfig):
+    bx = x_t @ params["in_x"].astype(x_t.dtype)
+    by = jax.nn.gelu(x_t @ params["in_y"].astype(x_t.dtype))
+    bx, conv_state = _conv(params["conv_w"].astype(x_t.dtype),
+                           params["conv_b"].astype(x_t.dtype),
+                           bx, cache["conv"])
+    r = bx @ params["gate_r"].astype(x_t.dtype)
+    i = bx @ params["gate_i"].astype(x_t.dtype)
+    y, h = rglru_step(cache["h"], bx[:, 0], r[:, 0], i[:, 0], params["lam"])
+    out = (y[:, None] * by) @ params["out"].astype(x_t.dtype)
+    return out, {"h": h, "conv": conv_state}

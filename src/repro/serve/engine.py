@@ -1,0 +1,171 @@
+"""Batched serving engine: request queue -> padded prefill waves -> decode.
+
+Wave-based batching: up to ``max_batch`` queued requests are grouped,
+LEFT-padded to the longest prompt, prefilled together (pad tokens carry a
+different segment id so content never attends padding — the same packed-
+segment machinery the training path uses), then decoded in lock-step with
+jitted, cache-donating steps.  Finished sequences (EOS or per-request
+max_new_tokens) are masked out; the wave ends when all finish.
+
+This covers the "serve a small model with batched requests" deliverable;
+slot-level continuous batching (replacing finished slots mid-wave) is a
+straightforward extension of the same cache layout and is left as the
+documented next step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+    wave: int = -1
+    enqueued_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 pad_id: int = 0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+        self._queue: List[Request] = []
+        self._done: Dict[int, Request] = {}
+        self._ids = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda params, cache, tok, pos, cs: model.decode_step(
+                params, cache, tok, pos, context_start=cs),
+            donate_argnums=(1,))
+        self._waves = 0
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               temperature: float = 0.0) -> int:
+        req = Request(next(self._ids), np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      temperature=temperature)
+        req.enqueued_at = time.time()
+        self._queue.append(req)
+        return req.req_id
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def result(self, req_id: int) -> Request:
+        return self._done[req_id]
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns all completed requests."""
+        while self._queue:
+            self._run_wave()
+        return sorted(self._done.values(), key=lambda r: r.req_id)
+
+    # ------------------------------------------------------------------ wave
+
+    def _stateful(self) -> bool:
+        pattern = getattr(self.model.cfg, "pattern", ())
+        return any(k in ("ssm", "rec") for k in pattern)
+
+    def _take_wave(self) -> List[Request]:
+        """Next wave.  Stateful families (SSM/RG-LRU) must not see pad
+        tokens before content (the recurrence would ingest them), so their
+        waves contain only equal-length prompts."""
+        if not self._stateful():
+            wave = self._queue[:self.max_batch]
+            self._queue = self._queue[self.max_batch:]
+            return wave
+        L0 = len(self._queue[0].prompt)
+        wave, rest = [], []
+        for r in self._queue:
+            if len(r.prompt) == L0 and len(wave) < self.max_batch:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return wave
+
+    def _run_wave(self) -> None:
+        wave = self._take_wave()
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        tokens = np.full((B, S), self.pad_id, np.int32)
+        segments = np.zeros((B, S), np.int32)          # 0 = pad segment
+        for i, r in enumerate(wave):
+            L = len(r.prompt)
+            tokens[i, S - L:] = r.prompt               # LEFT padding
+            segments[i, S - L:] = 1
+        # Positions are GLOBAL padded coordinates for every row: RoPE is
+        # shift-equivariant, so content starting at absolute (S - L) scores
+        # identically to starting at 0, and decode can use the shared
+        # absolute position S + step for all rows.
+        positions = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+
+        logits, cache, _ = self.model.prefill(
+            self.params, jnp.asarray(tokens),
+            positions=jnp.asarray(positions),
+            segments=jnp.asarray(segments))
+        ctx_start = jnp.asarray(
+            [S - len(r.prompt) for r in wave], jnp.int32)
+        max_new = max(r.max_new_tokens for r in wave)
+        tok = self._sample(logits[:, -1, :], wave)
+        active = np.ones((B,), bool)
+        for step in range(max_new):
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                t = int(tok[i, 0])
+                r.output.append(t)
+                if (r.eos_id is not None and t == r.eos_id) or \
+                        len(r.output) >= r.max_new_tokens:
+                    active[i] = False
+                    r.done = True
+                    r.finished_at = time.time()
+                    r.wave = self._waves
+            if not active.any():
+                break
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(tok),
+                jnp.asarray(S + step, jnp.int32), ctx_start)
+            tok = self._sample(logits[:, -1, :], wave)
+        for r in wave:
+            if not r.done:
+                r.done = True
+                r.finished_at = time.time()
+            self._done[r.req_id] = r
+        self._waves += 1
+
+    def _sample(self, logits, wave) -> np.ndarray:
+        temps = np.asarray([r.temperature for r in wave])
+        if (temps == 0).all():
+            return np.asarray(jnp.argmax(logits, axis=-1))[:, None] \
+                .astype(np.int32)
+        self._key, sub = jax.random.split(self._key)
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6))
+        out = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        return np.asarray(out)[:, None].astype(np.int32)

@@ -1,0 +1,74 @@
+"""CLI tests — the paper's check-in/checkout user interface."""
+
+import os
+
+import pytest
+
+from repro.cli import main
+
+
+@pytest.fixture
+def repo(tmp_path):
+    return str(tmp_path / "repo")
+
+
+@pytest.fixture
+def files(tmp_path):
+    paths = []
+    for i in range(3):
+        p = tmp_path / f"file{i}.txt"
+        p.write_bytes(f"contents {i}".encode() * 10)
+        paths.append(str(p))
+    return paths
+
+
+def test_checkin_checkout_roundtrip(repo, files, tmp_path, capsys):
+    assert main(["--repo", repo, "check-in", "ds", *files, "-m", "v1",
+                 "--tag", "golden"]) == 0
+    out_dir = str(tmp_path / "restore")
+    assert main(["--repo", repo, "checkout", "ds", "--rev", "golden",
+                 "--out", out_dir]) == 0
+    for i in range(3):
+        assert open(os.path.join(out_dir, f"file{i}.txt"), "rb").read() \
+            == f"contents {i}".encode() * 10
+
+
+def test_datasets_log_diff_tag(repo, files, capsys):
+    main(["--repo", repo, "check-in", "ds", files[0], "-m", "first"])
+    main(["--repo", repo, "check-in", "ds", files[1], "-m", "second"])
+    main(["--repo", repo, "datasets"])
+    assert "ds" in capsys.readouterr().out
+    main(["--repo", repo, "log", "ds"])
+    out = capsys.readouterr().out
+    assert "second" in out and "first" in out
+    # persistence across invocations: a new CLI process sees the repo
+    main(["--repo", repo, "tag", "ds", "release"])
+    main(["--repo", repo, "checkout", "ds", "--rev", "release"])
+    assert "snapshot" in capsys.readouterr().out
+
+
+def test_revoke_via_cli(repo, files, capsys):
+    main(["--repo", repo, "check-in", "ds", *files])
+    assert main(["--repo", repo, "revoke", "file1.txt",
+                 "--reason", "gdpr"]) == 0
+    out = capsys.readouterr().out
+    assert '"record_id": "file1.txt"' in out
+    main(["--repo", repo, "checkout", "ds"])
+    assert "file1.txt" not in capsys.readouterr().out
+
+
+def test_grant_denies_after_lockdown(repo, files, capsys):
+    main(["--repo", repo, "check-in", "ds", files[0]])
+    main(["--repo", repo, "--actor", "admin", "grant", "admin", "ds",
+          "ADMIN"])
+    from repro.core import PermissionError_
+
+    with pytest.raises(PermissionError_):
+        main(["--repo", repo, "--actor", "stranger", "checkout", "ds"])
+    assert main(["--repo", repo, "--actor", "admin", "checkout", "ds"]) == 0
+
+
+def test_gc_after_revoke(repo, files, capsys):
+    main(["--repo", repo, "check-in", "ds", *files])
+    main(["--repo", repo, "revoke", "file0.txt"])
+    assert main(["--repo", repo, "gc"]) == 0

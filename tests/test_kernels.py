@@ -1,0 +1,260 @@
+"""Per-kernel validation: Pallas (interpret=True) and XLA paths vs the
+pure-jnp oracles, with hypothesis-driven shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.rglru import rglru, rglru_reference, rglru_step
+from repro.kernels.ssd import ssd, ssd_reference, ssd_step
+
+IMPLS = ["xla", "pallas_interpret"]
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=3e-4, rtol=3e-4)
+
+
+def _assert_close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def _qkv(key, B, Sq, Sk, Hq, Hkv, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("case", [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, window, softcap)
+    (1, 128, 128, 4, 4, 32, True, None, None),     # MHA causal
+    (2, 128, 128, 8, 2, 32, True, None, None),     # GQA
+    (1, 256, 256, 4, 1, 64, True, None, None),     # MQA
+    (2, 128, 128, 4, 2, 32, True, 64, None),       # sliding window
+    (1, 128, 128, 4, 2, 32, True, None, 30.0),     # softcap (gemma2)
+    (1, 128, 128, 4, 2, 32, False, None, None),    # bidirectional (encoder)
+    (2, 128, 128, 4, 2, 32, True, 32, 50.0),       # window + softcap
+])
+def test_flash_matches_reference(impl, case):
+    B, Sq, Sk, Hq, Hkv, D, causal, window, softcap = case
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Sq, Sk, Hq, Hkv, D, jnp.float32)
+    ref = attention_reference(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, impl=impl, block_q=64, block_k=64)
+    _assert_close(out, ref, jnp.float32)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_packed_segments(impl):
+    B, S, Hq, Hkv, D = 2, 256, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, S, S, Hq, Hkv, D, jnp.float32)
+    segs = jnp.cumsum(
+        (jax.random.uniform(jax.random.PRNGKey(2), (B, S)) < 0.02), axis=1
+    ).astype(jnp.int32)
+    ref = attention_reference(q, k, v, causal=True, q_segments=segs,
+                              kv_segments=segs)
+    out = flash_attention(q, k, v, causal=True, q_segments=segs,
+                          kv_segments=segs, impl=impl, block_q=64, block_k=64)
+    _assert_close(out, ref, jnp.float32)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_bf16(impl):
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 128, 128, 4, 2, 64, jnp.bfloat16)
+    ref = attention_reference(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, impl=impl,
+                          block_q=64, block_k=64)
+    assert out.dtype == jnp.bfloat16
+    _assert_close(out, ref, jnp.bfloat16)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_q_offset_decode_chunk(impl):
+    """Attention for a q chunk positioned mid-sequence (chunked prefill)."""
+    B, Sq, Sk, Hq, Hkv, D = 1, 64, 256, 4, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, Sq, Sk, Hq, Hkv, D, jnp.float32)
+    off = 128
+    ref = attention_reference(q, k, v, causal=True, q_offset=off)
+    out = flash_attention(q, k, v, causal=True, q_offset=off, impl=impl,
+                          block_q=32, block_k=64)
+    _assert_close(out, ref, jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    log_s=st.integers(5, 8),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    log_d=st.integers(4, 6),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_property_flash_shape_sweep(b, log_s, hkv, group, log_d, causal, dtype):
+    S, D = 2 ** log_s, 2 ** log_d
+    Hq = hkv * group
+    q, k, v = _qkv(jax.random.PRNGKey(5), b, S, S, Hq, hkv, D, dtype)
+    ref = attention_reference(q, k, v, causal=causal)
+    for impl in IMPLS:
+        out = flash_attention(q, k, v, causal=causal, impl=impl,
+                              block_q=32, block_k=32)
+        assert out.shape == q.shape and out.dtype == dtype
+        _assert_close(out, ref, dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(key, B, S, H, P, N, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32).astype(dtype)
+    a = (jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, H))) * 0.5 + 0.5)
+    Bm = (jax.random.normal(ks[2], (B, S, N), jnp.float32) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.3).astype(dtype)
+    s0 = jax.random.normal(ks[4], (B, H, P, N), jnp.float32) * 0.1
+    return x, a.astype(jnp.float32), Bm, Cm, s0
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("chunk", [16, 32, 128])
+def test_ssd_matches_reference(impl, chunk):
+    x, a, Bm, Cm, s0 = _ssd_inputs(jax.random.PRNGKey(0), 2, 128, 4, 16, 32)
+    y_ref, sf_ref = ssd_reference(x, a, Bm, Cm, s0)
+    y, sf = ssd(x, a, Bm, Cm, s0, chunk=chunk, impl=impl)
+    _assert_close(y, y_ref, jnp.float32)
+    _assert_close(sf, sf_ref, jnp.float32)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_ssd_zero_initial_state(impl):
+    x, a, Bm, Cm, _ = _ssd_inputs(jax.random.PRNGKey(1), 1, 64, 2, 16, 16)
+    y_ref, sf_ref = ssd_reference(x, a, Bm, Cm)
+    y, sf = ssd(x, a, Bm, Cm, chunk=16, impl=impl)
+    _assert_close(y, y_ref, jnp.float32)
+    _assert_close(sf, sf_ref, jnp.float32)
+
+
+def test_ssd_decode_chain_equals_scan():
+    x, a, Bm, Cm, s0 = _ssd_inputs(jax.random.PRNGKey(2), 2, 16, 4, 16, 32)
+    state = s0
+    ys = []
+    for t in range(16):
+        y_t, state = ssd_step(state, x[:, t], a[:, t], Bm[:, t], Cm[:, t])
+        ys.append(y_t)
+    y_ref, sf_ref = ssd_reference(x, a, Bm, Cm, s0)
+    _assert_close(jnp.stack(ys, 1), y_ref, jnp.float32)
+    _assert_close(state, sf_ref, jnp.float32)
+
+
+def test_ssd_prefill_then_decode_continuity():
+    """State from chunked prefill continues correctly into decode."""
+    x, a, Bm, Cm, _ = _ssd_inputs(jax.random.PRNGKey(3), 1, 96, 2, 16, 16)
+    y_full, sf_full = ssd_reference(x, a, Bm, Cm)
+    _, s_mid = ssd(x[:, :64], a[:, :64], Bm[:, :64], Cm[:, :64],
+                   chunk=32, impl="xla")
+    state = s_mid
+    for t in range(64, 96):
+        y_t, state = ssd_step(state, x[:, t], a[:, t], Bm[:, t], Cm[:, t])
+    _assert_close(state, sf_full, jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    nc=st.integers(1, 4),
+    chunk=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([8, 16, 32]),
+)
+def test_property_ssd_shape_sweep(b, nc, chunk, h, p, n):
+    S = nc * chunk
+    x, a, Bm, Cm, s0 = _ssd_inputs(jax.random.PRNGKey(6), b, S, h, p, n)
+    y_ref, sf_ref = ssd_reference(x, a, Bm, Cm, s0)
+    for impl in IMPLS:
+        y, sf = ssd(x, a, Bm, Cm, s0, chunk=chunk, impl=impl)
+        assert y.shape == x.shape
+        _assert_close(y, y_ref, jnp.float32)
+        _assert_close(sf, sf_ref, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def _rglru_inputs(key, B, S, W, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    mk = lambda i: jax.random.normal(ks[i], (B, S, W), jnp.float32).astype(dtype)
+    lam = jax.random.normal(ks[3], (W,), jnp.float32)
+    h0 = jax.random.normal(ks[4], (B, W), jnp.float32) * 0.2
+    return mk(0), mk(1), mk(2), lam, h0
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_rglru_matches_reference(impl, chunk):
+    x, r, i, lam, h0 = _rglru_inputs(jax.random.PRNGKey(0), 2, 128, 64)
+    y_ref, hf_ref = rglru_reference(x, r, i, lam, h0)
+    y, hf = rglru(x, r, i, lam, h0, chunk=chunk, impl=impl)
+    _assert_close(y, y_ref, jnp.float32)
+    _assert_close(hf, hf_ref, jnp.float32)
+
+
+def test_rglru_decode_chain():
+    x, r, i, lam, h0 = _rglru_inputs(jax.random.PRNGKey(1), 2, 16, 32)
+    h = h0
+    ys = []
+    for t in range(16):
+        y_t, h = rglru_step(h, x[:, t], r[:, t], i[:, t], lam)
+        ys.append(y_t)
+    y_ref, hf_ref = rglru_reference(x, r, i, lam, h0)
+    _assert_close(jnp.stack(ys, 1), y_ref, jnp.float32)
+    _assert_close(h, hf_ref, jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    log_s=st.integers(4, 7),
+    w=st.sampled_from([32, 64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_property_rglru_shape_sweep(b, log_s, w, dtype):
+    S = 2 ** log_s
+    x, r, i, lam, h0 = _rglru_inputs(jax.random.PRNGKey(2), b, S, w, dtype)
+    y_ref, hf_ref = rglru_reference(x, r, i, lam, h0)
+    for impl in IMPLS:
+        y, hf = rglru(x, r, i, lam, h0, chunk=16, impl=impl)
+        assert y.shape == x.shape and y.dtype == dtype
+        _assert_close(y, y_ref, dtype)
+        _assert_close(hf, hf_ref, dtype)
+
+
+def test_rglru_forgets_long_past():
+    """Stability property: with strong decay the state forgets its init."""
+    B, S, W = 1, 512, 32
+    x, r, i, lam, _ = _rglru_inputs(jax.random.PRNGKey(3), B, S, W)
+    lam = jnp.abs(lam) + 2.0  # strong decay
+    h_a = jnp.zeros((B, W), jnp.float32)
+    h_b = jnp.ones((B, W), jnp.float32) * 10.0
+    _, hf_a = rglru_reference(x, r, i, lam, h_a)
+    _, hf_b = rglru_reference(x, r, i, lam, h_b)
+    np.testing.assert_allclose(np.asarray(hf_a), np.asarray(hf_b), atol=1e-3)

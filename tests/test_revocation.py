@@ -1,0 +1,104 @@
+"""Revocation tests: logical + physical removal, shared-blob retention,
+downstream impact via lineage."""
+
+import pytest
+
+from repro.core import (DatasetManager, MemoryBackend, NotFoundError,
+                        ObjectStore, Pipeline, Record, RevocationEngine,
+                        RevokedError, Workflow, WorkflowManager, component)
+
+
+@pytest.fixture
+def dm():
+    return DatasetManager(ObjectStore(MemoryBackend()))
+
+
+def test_revoke_removes_from_heads_and_cas(dm):
+    dm.check_in("raw", [Record("keep", b"keep-bytes", {}),
+                        Record("bad", b"bad-bytes", {})], actor="a")
+    eng = RevocationEngine(dm)
+    report = eng.revoke("bad", actor="admin", reason="user request")
+    # new head exists without the record
+    snap = dm.checkout("raw", actor="a")
+    assert snap.record_ids() == ["keep"]
+    assert report.new_head_commits.get("raw@main")
+    # payload physically gone — reading the OLD version's record fails
+    old_commit = report.affected_versions[0][1]
+    old = dm.checkout("raw", actor="a", rev=old_commit)
+    with pytest.raises(NotFoundError):
+        old.read("bad")
+    assert eng.is_revoked("bad")
+    with pytest.raises(RevokedError):
+        eng.read_or_raise("raw", "bad", actor="a")
+
+
+def test_revoke_spans_multiple_datasets_and_versions(dm):
+    dm.check_in("a", [Record("x", b"x-bytes", {})], actor="u")
+    dm.check_in("a", [Record("y", b"y", {})], actor="u")  # x persists in v2
+    dm.check_in("b", [Record("x", b"x-bytes", {})], actor="u")
+    eng = RevocationEngine(dm)
+    report = eng.revoke("x", actor="admin")
+    assert {ds for ds, _ in report.affected_versions} == {"a", "b"}
+    assert len(report.affected_versions) == 3  # a@v1, a@v2, b@v1
+    assert dm.checkout("a", actor="u").record_ids() == ["y"]
+    assert dm.checkout("b", actor="u").record_ids() == []
+
+
+def test_revoke_retains_byte_identical_shared_blob(dm):
+    shared = b"identical payload"
+    dm.check_in("ds", [Record("victim", shared, {}),
+                       Record("innocent", shared, {})], actor="u")
+    eng = RevocationEngine(dm)
+    report = eng.revoke("victim", actor="admin")
+    assert report.blobs_retained_shared  # NOT deleted
+    assert not report.blobs_deleted
+    # innocent record still readable on new head
+    snap = dm.checkout("ds", actor="u")
+    assert snap.read("innocent") == shared
+
+
+def test_revocation_reports_downstream_snapshots_and_versions(dm):
+    wm = WorkflowManager(dm)
+    dm.check_in("raw", [Record("bad", b"bad", {}), Record("ok", b"ok", {})],
+                actor="u")
+
+    @component(kind="map", name="identity")
+    def identity(rec):
+        return rec
+
+    wm.register(Workflow(name="derive", pipeline=Pipeline([identity]),
+                         input_dataset="raw", output_dataset="derived"))
+    run = wm.run("derive")
+    assert run.state == "SUCCEEDED", run.error
+
+    eng = RevocationEngine(dm)
+    report = eng.revoke("bad", actor="admin")
+    # the derived dataset version ingested the record -> reported downstream
+    assert report.downstream_snapshots or report.downstream_other
+    all_downstream = (report.downstream_snapshots + report.downstream_other
+                      + report.downstream_checkpoints)
+    assert any("derived" in n or "snapshot" in n for n in all_downstream)
+    # and 'bad' was in 'derived' too, so derived's head was also rewritten
+    assert "derived@main" in report.new_head_commits
+    assert dm.checkout("derived", actor="u").record_ids() == ["ok"]
+
+
+def test_revocation_requires_admin(dm):
+    dm.check_in("locked", [Record("r", b"r", {})], actor="owner")
+    dm.acl.grant("owner", "locked", "ADMIN")
+    dm.acl.grant("reader", "locked", "READ")
+    eng = RevocationEngine(dm)
+    from repro.core import PermissionError_
+    with pytest.raises(PermissionError_):
+        eng.revoke("r", actor="reader")
+    eng.revoke("r", actor="owner")  # fine
+
+
+def test_revocation_log_persisted(dm):
+    dm.check_in("ds", [Record("r", b"r", {})], actor="u")
+    eng = RevocationEngine(dm)
+    eng.revoke("r", actor="admin", reason="why")
+    log = dm.store.get_meta("revocation/log")
+    assert len(log) == 1
+    assert log[0]["record_id"] == "r"
+    assert log[0]["reason"] == "why"

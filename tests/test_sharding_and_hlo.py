@@ -1,0 +1,159 @@
+"""Sharding-rule and HLO-analysis unit tests (no big meshes needed)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.hlo_analysis import (HW, parse_collectives, roofline_terms)
+from repro.models import RuntimeConfig, build_model
+from repro.train.sharding import ShardingRules, batch_specs, param_specs
+
+
+class FakeMesh:
+    """Just enough Mesh interface for rule evaluation."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+@pytest.fixture
+def rules():
+    return ShardingRules(FakeMesh({"data": 16, "model": 16}))
+
+
+@pytest.fixture
+def rules_mp():
+    return ShardingRules(FakeMesh({"pod": 2, "data": 16, "model": 16}))
+
+
+def _abstract_params(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg, RuntimeConfig())
+    return cfg, model.init_abstract()
+
+
+def test_param_specs_qwen(rules):
+    cfg, params = _abstract_params("qwen2.5-32b")
+    specs = param_specs(params, rules)
+    # embed (V, D): vocab on model, d_model on data
+    assert specs["embed"] == P("model", "data")
+    blk = specs["blocks"]["pos0"]
+    # stacked leading dim never sharded; wq (R, D, H*dh)
+    assert blk["attn"]["wq"]["w"] == P(None, "data", "model")
+    assert blk["attn"]["wo"]["w"] == P(None, "model", "data")
+    assert blk["mlp"]["wi"] == P(None, "data", "model")
+    assert blk["mlp"]["wo"] == P(None, "model", "data")
+    # norms replicated
+    assert blk["norm1"]["scale"] == P(None, None)
+    assert specs["lm_head"] == P("data", "model")
+
+
+def test_param_specs_moe_expert_parallel(rules):
+    cfg, params = _abstract_params("arctic-480b")
+    specs = param_specs(params, rules)
+    moe = specs["blocks"]["pos0"]["moe"]
+    # 128 experts / 16 = 8 per shard -> expert-parallel over data
+    assert moe["wi"] == P(None, "data", None, "model")
+    assert moe["wo"] == P(None, "data", "model", None)
+
+
+def test_param_specs_moe_small_expert_count(rules):
+    cfg, params = _abstract_params("mixtral-8x22b")
+    specs = param_specs(params, rules)
+    moe = specs["blocks"]["pos0"]["moe"]
+    # 8 experts < 16-way axis: experts unsharded, d_model/d_ff sharded
+    assert moe["wi"] == P(None, None, "data", "model")
+    assert moe["wo"] == P(None, None, "model", "data")
+
+
+def test_param_specs_never_invalid_divisibility(rules, rules_mp):
+    """No spec may shard a dim that the axis size does not divide."""
+    for arch in ["qwen2.5-32b", "arctic-480b", "mamba2-1.3b",
+                 "recurrentgemma-9b", "seamless-m4t-medium", "gemma3-12b"]:
+        cfg, params = _abstract_params(arch)
+        for r in (rules, rules_mp):
+            specs = param_specs(params, r)
+            flat_p = jax.tree.leaves(params)
+            flat_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            for leaf, spec in zip(flat_p, flat_s):
+                for dim, axis in zip(leaf.shape, tuple(spec)):
+                    if axis is None:
+                        continue
+                    axes = axis if isinstance(axis, tuple) else (axis,)
+                    size = 1
+                    for a in axes:
+                        size *= r.size(a)
+                    assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+def test_batch_specs_shard_batch(rules, rules_mp):
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    assert batch_specs(batch, rules)["tokens"] == P(("data",), None)
+    assert batch_specs(batch, rules_mp)["tokens"] == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicated
+    one = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    assert batch_specs(one, rules)["tokens"] == P(None, None)
+    # batch=32 on multi-pod: 32 == pod*data -> both axes
+    b32 = {"tokens": jax.ShapeDtypeStruct((32, 10), jnp.int32)}
+    assert batch_specs(b32, rules_mp)["tokens"] == P(("pod", "data"), None)
+
+
+def test_vocab_padding_divisible():
+    for arch in ["seamless-m4t-medium", "mamba2-1.3b", "internvl2-2b"]:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[32,512]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %all-gather.2 = bf16[64,1024]{1,0} all-gather(%p0), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %reduce-scatter.3 = f32[16,128]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}, to_apply=%add
+  %all-to-all.4 = bf16[8,256]{1,0} all-to-all(%y), channel_id=4, replica_groups=[2,4]<=[8], dimensions={0}
+  %collective-permute.5 = f32[4,4]{1,0} collective-permute(%z), channel_id=5, source_target_pairs={{0,1}}
+  %cp.done = f32[4,4]{1,0} collective-permute-done(%cp.start)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(HLO_SAMPLE)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                            "reduce-scatter": 1, "all-to-all": 1,
+                            "collective-permute": 1}
+    # all-reduce: 32*512*4 = 65536 B, n=4 -> 2 * 65536 * 3/4 = 98304
+    assert stats.bytes_by_kind["all-reduce"] == pytest.approx(98304)
+    # all-gather: 64*1024*2 = 131072, n=4 -> 131072 * 3/4
+    assert stats.bytes_by_kind["all-gather"] == pytest.approx(98304)
+    # reduce-scatter: result 16*128*4 = 8192, n=8 -> 8192 * 7
+    assert stats.bytes_by_kind["reduce-scatter"] == pytest.approx(57344)
+    # collective-permute: result bytes
+    assert stats.bytes_by_kind["collective-permute"] == pytest.approx(64)
+
+
+def test_roofline_terms_dominant():
+    t = roofline_terms(197e12, 819e9 * 2, 0.0, HW())
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["dominant"] == "memory"
+    assert t["bound_s"] == pytest.approx(2.0)
+
+
+def test_scan_or_unroll_equivalence():
+    from repro.models.decoder import _scan_or_unroll
+
+    def body(c, x):
+        return c + x["a"], {"out": c * 2}
+
+    xs = {"a": jnp.arange(5.0)}
+    c1, y1 = _scan_or_unroll(body, jnp.float32(0), xs, 5, True)
+    c2, y2 = _scan_or_unroll(body, jnp.float32(0), xs, 5, False)
+    assert jnp.allclose(c1, c2)
+    assert jnp.allclose(y1["out"], y2["out"])

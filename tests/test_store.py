@@ -1,0 +1,112 @@
+"""Storage engine tests: content addressing, chunking, dedup, GC, integrity."""
+
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.store import (DEFAULT_CHUNK_SIZE, FileBackend, IntegrityError,
+                              MemoryBackend, NotFoundError, ObjectStore)
+
+
+@pytest.fixture(params=["memory", "file"])
+def store(request, tmp_path):
+    if request.param == "memory":
+        return ObjectStore(MemoryBackend(), chunk_size=1024)
+    return ObjectStore(FileBackend(str(tmp_path / "cas")), chunk_size=1024)
+
+
+def test_roundtrip_small(store):
+    ref = store.put_blob(b"hello world")
+    assert store.get_blob(ref) == b"hello world"
+    assert store.get_blob(ref.digest) == b"hello world"
+
+
+def test_roundtrip_multichunk(store):
+    data = os.urandom(10 * 1024 + 37)  # > chunk_size, not aligned
+    ref = store.put_blob(data)
+    assert ref.n_chunks == 11
+    assert store.get_blob(ref) == data
+
+
+def test_dedup(store):
+    data = b"x" * 5000
+    r1 = store.put_blob(data)
+    r2 = store.put_blob(data)
+    assert r1 == r2
+    assert store.stats.dedup_hits > 0
+
+
+def test_compression_helps(store):
+    data = b"a" * 100_000
+    store.put_blob(data)
+    assert store.stats.bytes_stored < 10_000
+
+
+def test_not_found(store):
+    with pytest.raises(NotFoundError):
+        store.get_blob("deadbeef" * 8)
+
+
+def test_integrity_detection():
+    backend = MemoryBackend()
+    store = ObjectStore(backend, chunk_size=1024, compress=False)
+    ref = store.put_blob(b"important bytes")
+    key = "c-" + ref.digest
+    raw = backend.get(key)
+    backend.put(key, raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+    with pytest.raises(IntegrityError):
+        store.get_blob(ref)
+
+
+def test_delete_blob(store):
+    data = os.urandom(5000)
+    ref = store.put_blob(data)
+    store.delete_blob(ref)
+    with pytest.raises(NotFoundError):
+        store.get_blob(ref)
+
+
+def test_gc_keeps_roots_drops_garbage(store):
+    keep = store.put_blob(os.urandom(3000))
+    drop = store.put_blob(os.urandom(3000))
+    n = store.gc(roots=[keep.digest])
+    assert n > 0
+    assert store.get_blob(keep) == store.get_blob(keep)
+    with pytest.raises(NotFoundError):
+        store.get_blob(drop)
+
+
+def test_meta_namespace_survives_gc(store):
+    store.put_meta("refs/x", {"a": 1})
+    store.gc(roots=[])
+    assert store.get_meta("refs/x") == {"a": 1}
+
+
+def test_json_roundtrip(store):
+    obj = {"k": [1, 2, 3], "nested": {"x": "y"}}
+    ref = store.put_json(obj)
+    assert store.get_json(ref) == obj
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.binary(min_size=0, max_size=8192))
+def test_property_roundtrip_any_bytes(data):
+    store = ObjectStore(MemoryBackend(), chunk_size=257)  # odd size on purpose
+    ref = store.put_blob(data)
+    assert store.get_blob(ref) == data
+    assert ref.size == len(data)
+
+
+@settings(max_examples=25, deadline=None)
+@given(blobs=st.lists(st.binary(min_size=1, max_size=2048), min_size=1, max_size=8))
+def test_property_dedup_identical_digests(blobs):
+    store = ObjectStore(MemoryBackend(), chunk_size=512)
+    refs = [store.put_blob(b) for b in blobs]
+    # identical bytes -> identical refs
+    for b, r in zip(blobs, refs):
+        assert store.put_blob(b) == r
+    # all blobs still readable
+    for b, r in zip(blobs, refs):
+        assert store.get_blob(r) == b

@@ -1,0 +1,114 @@
+"""Versioning tests: commits, refs, diff, merge, history."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.store import MemoryBackend, ObjectStore
+from repro.core.versioning import (Manifest, MergeConflict, RecordEntry,
+                                   VersionStore, diff_manifests)
+
+
+@pytest.fixture
+def vs():
+    return VersionStore(ObjectStore(MemoryBackend(), chunk_size=1024))
+
+
+def _entry(vs, rid, payload):
+    return RecordEntry(rid, vs.store.put_blob(payload), {"len": len(payload)})
+
+
+def test_commit_and_resolve(vs):
+    m = Manifest([_entry(vs, "a", b"1"), _entry(vs, "b", b"2")])
+    c = vs.commit("ds", m, parents=[], author="u", message="init")
+    vs.set_branch("ds", "main", c.commit_id)
+    vs.set_tag("ds", "v1", c.commit_id)
+    assert vs.resolve("ds", "main") == c.commit_id
+    assert vs.resolve("ds", "v1") == c.commit_id
+    assert vs.resolve("ds", c.commit_id) == c.commit_id
+    got = vs.get_manifest(vs.get_commit(c.commit_id).tree)
+    assert got.record_ids() == ["a", "b"]
+
+
+def test_diff(vs):
+    m1 = Manifest([_entry(vs, "a", b"1"), _entry(vs, "b", b"2")])
+    m2 = Manifest([_entry(vs, "b", b"CHANGED"), _entry(vs, "c", b"3")])
+    d = diff_manifests(m1, m2)
+    assert d.added == ["c"]
+    assert d.removed == ["a"]
+    assert d.modified == ["b"]
+    assert d.unchanged == 0
+    assert not d.is_empty
+    assert d.summary() == "+1 -1 ~1 =0"
+
+
+def test_log_first_parent(vs):
+    m = Manifest()
+    c1 = vs.commit("ds", m, [], "u", "1")
+    c2 = vs.commit("ds", m, [c1.commit_id], "u", "2")
+    c3 = vs.commit("ds", m, [c2.commit_id], "u", "3")
+    log = vs.log(c3.commit_id)
+    assert [c.message for c in log] == ["3", "2", "1"]
+
+
+def test_merge_disjoint_changes(vs):
+    base_m = Manifest([_entry(vs, "a", b"1"), _entry(vs, "b", b"2")])
+    base = vs.commit("ds", base_m, [], "u", "base")
+
+    mo = base_m.copy()
+    mo.add(_entry(vs, "a", b"ours"))
+    ours = vs.commit("ds", mo, [base.commit_id], "u", "ours")
+
+    mt = base_m.copy()
+    mt.add(_entry(vs, "c", b"theirs-new"))
+    theirs = vs.commit("ds", mt, [base.commit_id], "u", "theirs")
+
+    merged = vs.merge("ds", ours.commit_id, theirs.commit_id, "u")
+    man = vs.get_manifest(merged.tree)
+    assert man.record_ids() == ["a", "b", "c"]
+    assert vs.store.get_blob(man.get("a").blob) == b"ours"
+    assert vs.store.get_blob(man.get("c").blob) == b"theirs-new"
+    assert merged.parents == (ours.commit_id, theirs.commit_id)
+
+
+def test_merge_conflict(vs):
+    base_m = Manifest([_entry(vs, "a", b"1")])
+    base = vs.commit("ds", base_m, [], "u", "base")
+    mo = Manifest([_entry(vs, "a", b"ours")])
+    mt = Manifest([_entry(vs, "a", b"theirs")])
+    ours = vs.commit("ds", mo, [base.commit_id], "u", "o")
+    theirs = vs.commit("ds", mt, [base.commit_id], "u", "t")
+    with pytest.raises(MergeConflict) as ei:
+        vs.merge("ds", ours.commit_id, theirs.commit_id, "u")
+    assert ei.value.record_ids == ["a"]
+
+
+def test_merge_delete_vs_keep(vs):
+    base_m = Manifest([_entry(vs, "a", b"1"), _entry(vs, "b", b"2")])
+    base = vs.commit("ds", base_m, [], "u", "base")
+    mo = base_m.copy()
+    mo.remove("a")  # ours deletes a
+    ours = vs.commit("ds", mo, [base.commit_id], "u", "o")
+    theirs = vs.commit("ds", base_m.copy(), [base.commit_id], "u", "t")
+    merged = vs.merge("ds", ours.commit_id, theirs.commit_id, "u")
+    assert vs.get_manifest(merged.tree).record_ids() == ["b"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ids=st.lists(st.text(alphabet="abcdef", min_size=1, max_size=4),
+                 min_size=1, max_size=10, unique=True),
+    payloads=st.data(),
+)
+def test_property_diff_inverse(ids, payloads):
+    """diff(a,b) and diff(b,a) mirror each other."""
+    vs = VersionStore(ObjectStore(MemoryBackend()))
+    half = len(ids) // 2
+    m1 = Manifest([_entry(vs, rid, rid.encode()) for rid in ids[:half + 1]])
+    m2 = Manifest([_entry(vs, rid, rid.encode() * 2) for rid in ids[half:]])
+    d_ab = diff_manifests(m1, m2)
+    d_ba = diff_manifests(m2, m1)
+    assert d_ab.added == d_ba.removed
+    assert d_ab.removed == d_ba.added
+    assert d_ab.modified == d_ba.modified
+    assert d_ab.unchanged == d_ba.unchanged

@@ -1,0 +1,196 @@
+"""Workflow manager + transforms tests: pipelines, triggers, stragglers,
+human tasks, lineage of runs."""
+
+import time
+
+import pytest
+
+from repro.core import (DatasetManager, FilterComponent, HumanTask,
+                        HumanTaskQueue, MapComponent, MemoryBackend,
+                        ObjectStore, Pipeline, Record, RunState, Workflow,
+                        WorkflowManager, component)
+
+
+@pytest.fixture
+def dm():
+    return DatasetManager(ObjectStore(MemoryBackend()))
+
+
+@pytest.fixture
+def wm(dm):
+    return WorkflowManager(dm, worker_slots=4)
+
+
+def seed_raw(dm, n=8, name="raw"):
+    recs = [Record(f"r{i}", f"text {i}".encode(), {"i": i}) for i in range(n)]
+    return dm.check_in(name, recs, actor="ingest", message="pipeline A")
+
+
+def upper_pipeline():
+    @component(kind="map", name="uppercase")
+    def uppercase(rec):
+        return Record(rec.record_id, rec.data.upper(), rec.attrs)
+
+    @component(kind="filter", name="even_only")
+    def even_only(rec):
+        return rec.attrs.get("i", 0) % 2 == 0
+
+    return Pipeline([uppercase, even_only], name="clean")
+
+
+def test_pipeline_chaining_operator():
+    a = MapComponent(lambda r: r, name="a")
+    b = FilterComponent(lambda r: True, name="b")
+    c = MapComponent(lambda r: r, name="c")
+    p = a | b | c
+    assert [x.name for x in p.components] == ["a", "b", "c"]
+
+
+def test_manual_run_materializes_snapshot(dm, wm):
+    seed_raw(dm)
+    wm.register(Workflow(name="clean", pipeline=upper_pipeline(),
+                         input_dataset="raw", n_shards=3))
+    run = wm.run("clean")
+    assert run.state == RunState.SUCCEEDED, run.error
+    assert len(run.output_records) == 4  # even ids only
+    assert all(r.data == r.data.upper() for r in run.output_records)
+    rep = run.report()
+    assert rep["state"] == "SUCCEEDED"
+    assert sum(s["in"] for s in rep["shards"]) == 8
+
+
+def test_run_commits_output_dataset(dm, wm):
+    seed_raw(dm)
+    wm.register(Workflow(name="clean", pipeline=upper_pipeline(),
+                         input_dataset="raw", output_dataset="clean"))
+    run = wm.run("clean")
+    assert run.state == RunState.SUCCEEDED, run.error
+    snap = dm.checkout("clean", actor="x")
+    assert len(snap) == 4
+    assert snap.read("r0") == b"TEXT 0"
+
+
+def test_event_trigger_on_new_version(dm, wm):
+    wm.register(Workflow(name="clean", pipeline=upper_pipeline(),
+                         input_dataset="raw", output_dataset="clean",
+                         trigger_on_commit_to="raw"))
+    seed_raw(dm)  # this commit should trigger the workflow
+    runs = wm.runs("clean")
+    assert len(runs) == 1
+    assert runs[0].trigger.startswith("event:commit:raw")
+    assert runs[0].state == RunState.SUCCEEDED
+    # the workflow's own output commit must NOT have re-triggered anything
+    assert len(wm.runs("clean")) == 1
+
+
+def test_time_schedule_tick(dm, wm):
+    seed_raw(dm)
+    wm.register(Workflow(name="clean", pipeline=upper_pipeline(),
+                         input_dataset="raw", trigger_every_s=10.0))
+    t0 = 1000.0
+    assert wm.tick(t0) == []          # first tick arms the timer
+    assert wm.tick(t0 + 5) == []      # not yet
+    started = wm.tick(t0 + 11)        # fires
+    assert len(started) == 1
+    assert wm.tick(t0 + 12) == []     # re-armed
+    assert len(wm.tick(t0 + 22)) == 1
+
+
+def test_shard_failure_retries(dm, wm):
+    seed_raw(dm, n=6)
+    calls = {"n": 0}
+
+    @component(kind="map", name="flaky")
+    def flaky(rec):
+        calls["n"] += 1
+        if rec.record_id == "r0" and calls["n"] < 3:
+            raise ValueError("transient")
+        return rec
+
+    wm.register(Workflow(name="flaky", pipeline=Pipeline([flaky]),
+                         input_dataset="raw", n_shards=2, max_retries=3))
+    run = wm.run("flaky")
+    assert run.state == RunState.SUCCEEDED, run.error
+    assert len(run.output_records) == 6
+    assert any(s.attempts > 1 for s in run.shard_reports)
+
+
+def test_shard_failure_exhausts_retries(dm, wm):
+    seed_raw(dm, n=4)
+
+    @component(kind="map", name="poison")
+    def poison(rec):
+        if rec.record_id == "r1":
+            raise ValueError("permanent")
+        return rec
+
+    wm.register(Workflow(name="poison", pipeline=Pipeline([poison]),
+                         input_dataset="raw", n_shards=2, max_retries=1))
+    run = wm.run("poison")
+    assert run.state == RunState.FAILED
+    assert "permanent" in run.error
+
+
+def test_straggler_speculative_execution(dm, wm):
+    seed_raw(dm, n=8)
+    slow_once = {"done": False}
+
+    @component(kind="map", name="slowpoke")
+    def slowpoke(rec):
+        # first execution of shard holding r1 sleeps long; duplicate is fast
+        if rec.record_id == "r1" and not slow_once["done"]:
+            slow_once["done"] = True
+            time.sleep(0.6)
+        return rec
+
+    wm.register(Workflow(name="slow", pipeline=Pipeline([slowpoke]),
+                         input_dataset="raw", n_shards=4,
+                         speculative_factor=2.0, min_speculative_wait_s=0.02))
+    run = wm.run("slow")
+    assert run.state == RunState.SUCCEEDED, run.error
+    assert len(run.output_records) == 8
+    # output must be exactly the input set (no dupes from speculation)
+    ids = sorted(r.record_id for r in run.output_records)
+    assert ids == [f"r{i}" for i in range(8)]
+
+
+def test_human_task_park_and_resume(dm, wm):
+    seed_raw(dm, n=3)
+    q = HumanTaskQueue()
+    human = HumanTask(q, task_id="label-batch-1", name="labeling")
+    wm.register(Workflow(name="label", pipeline=Pipeline([human]),
+                         input_dataset="raw", output_dataset="labeled",
+                         n_shards=1))
+    run = wm.run("label")
+    assert run.state == RunState.WAITING_HUMAN
+    assert run.waiting_task == "label-batch-1"
+    assert len(q.pending("label-batch-1")) == 3
+    # humans complete the labels
+    for rec in q.pending("label-batch-1"):
+        q.complete("label-batch-1", rec.record_id,
+                   rec.data + b" [label=ok]", label="ok")
+    run2 = wm.resume(run.run_id)
+    assert run2.state == RunState.SUCCEEDED, run2.error
+    snap = dm.checkout("labeled", actor="x")
+    assert len(snap) == 3
+    assert snap.read("r0").endswith(b"[label=ok]")
+    assert snap.attrs("r0")["label"] == "ok"
+
+
+def test_run_lineage_links_input_to_output(dm, wm):
+    seed_raw(dm)
+    wm.register(Workflow(name="clean", pipeline=upper_pipeline(),
+                         input_dataset="raw", output_dataset="clean"))
+    run = wm.run("clean")
+    from repro.core.dataset import version_node_id
+    out_node = version_node_id("clean", run.output_commit)
+    anc = dm.lineage.ancestors(out_node)
+    assert run.input_snapshot in anc
+    assert f"workflow_run:{run.run_id}" in anc
+    assert version_node_id("raw", run.input_commit) in anc
+
+
+def test_pipeline_determinism_fingerprint():
+    p1 = upper_pipeline()
+    p2 = upper_pipeline()
+    assert p1.fingerprint() == p2.fingerprint()
