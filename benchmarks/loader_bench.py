@@ -7,22 +7,23 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import DatasetManager, MemoryBackend, ObjectStore, Record
+from repro.core import Record
 from repro.core.transforms import Pipeline, RunContext
 from repro.data import PackComponent, ShardedSnapshotLoader, TokenizeComponent
+from repro.platform import Platform
 
 
 def run() -> List[Tuple[str, float, str]]:
     rows = []
-    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    plat = Platform.open(actor="b")
     docs = [Record(f"d{i:04d}", b"some training text " * 64, {})
             for i in range(512)]
-    dm.check_in("raw", docs, actor="b")
-    snap_in = dm.checkout("raw", actor="b", register_snapshot=False)
+    plat.dataset("raw").check_in(docs)
     pipe = Pipeline([TokenizeComponent(), PackComponent(seq_len=512)])
-    packed = pipe.run(list(snap_in), RunContext())
-    dm.check_in("packed", packed, actor="b")
-    snap = dm.checkout("packed", actor="b", register_snapshot=False)
+    packed = pipe.run(list(plat.dataset("raw").plan()), RunContext())
+    plat.dataset("packed").check_in(packed)
+    # lazy plan feeds the loader directly — no snapshot materialization
+    snap = plat.dataset("packed").plan()
 
     for batch, seq in [(8, 512), (32, 512)]:
         loader = ShardedSnapshotLoader(snap, batch, seq)

@@ -15,8 +15,9 @@ import numpy as np
 
 from repro.core import (DatasetManager, MemoryBackend, ObjectStore, Pipeline,
                         Record, RevocationEngine, Workflow, WorkflowManager,
-                        component)
+                        attr, component)
 from repro.data import PackComponent, TokenizeComponent
+from repro.platform import Platform
 
 
 def timeit(fn: Callable[[], object], repeat: int = 5) -> float:
@@ -34,9 +35,9 @@ def _docs(n, size=2048, seed=0):
     return [Record(f"d{i:05d}", rng.bytes(size), {"i": i}) for i in range(n)]
 
 
-def run() -> List[Tuple[str, float, str]]:
+def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
-    N, SZ = 256, 2048
+    N, SZ = (64, 512) if smoke else (256, 2048)
 
     # --- check-in ---------------------------------------------------------
     def bench_checkin():
@@ -44,7 +45,7 @@ def run() -> List[Tuple[str, float, str]]:
         dm.check_in("ds", _docs(N, SZ), actor="b")
 
     us = timeit(bench_checkin, 3)
-    rows.append(("checkin_256x2KiB", us,
+    rows.append((f"checkin_{N}x{SZ}B", us,
                  f"{N * SZ / (us / 1e6) / 2**20:.0f}MiB/s"))
 
     dm = DatasetManager(ObjectStore(MemoryBackend()))
@@ -122,4 +123,33 @@ def run() -> List[Tuple[str, float, str]]:
     us = timeit(bench_revoke, 3)
     rows.append(("revoke_record_2datasets", us, "logical+physical"))
 
+    # --- facade: declarative checkout, cold vs snapshot-cache hit -------------
+    plat = Platform.open(actor="bench")
+    plat.dataset("q").check_in(_docs(N, SZ))
+    q = attr("i") >= 0
+    handle = plat.dataset("q")
+    us = timeit(lambda: handle.plan(where=q).entries(), 5)
+    rows.append(("facade_plan_stream", us, f"{N} records"))
+
+    handle.checkout(where=q)  # warm the (commit, query-digest) cache
+    us = timeit(lambda: handle.checkout(where=q), 5)
+    rows.append(("facade_checkout_cached", us, "snapshot dedup hit"))
+
     return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"platform/{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,19 +12,16 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import RevocationEngine
 from repro.launch import train as train_mod
 
 out = train_mod.main(["--arch", "mamba2-1.3b", "--smoke", "--steps", "10",
                       "--batch", "4", "--seq-len", "64",
                       "--checkpoint-every", "5", "--log-every", "5"])
-dm = out["dm"]
+plat = out["platform"]
 
-victim = dm.checkout("corpus/raw", actor="auditor",
-                     register_snapshot=False).record_ids()[0]
+victim = plat.dataset("corpus/raw").plan(actor="auditor").record_ids()[0]
 print(f"\nrevoking raw record {victim!r} ...")
-report = RevocationEngine(dm).revoke(victim, actor="admin",
-                                     reason="user deletion request")
+report = plat.revoke(victim, actor="admin", reason="user deletion request")
 print(f"  versions rewritten : {len(report.affected_versions)}")
 print(f"  blobs erased       : {len(report.blobs_deleted)}")
 print(f"  snapshots flagged  : {len(report.downstream_snapshots)}")

@@ -1,11 +1,14 @@
-"""Quickstart: the paper's Fig. 1 topology end-to-end, in ~80 lines.
+"""Quickstart: the paper's Fig. 1 topology end-to-end, in ~80 lines —
+written against the supported public API: ``Platform.open(...)`` plus
+dataset handles and the declarative query algebra.
 
   pipeline A: ingest raw docs  -> data repository (versioned)
   pipeline X: clean+tokenize   -> snapshot 1 (for training)
   pipeline Z: sample           -> snapshot 2 (for labeling, human task)
   pipeline Y: filter + commit  -> snapshot 3 committed back as new version
 
-plus: tags, queries, ACL, version diff, lineage, and revocation.
+plus: tags, declarative queries, snapshot caching, ACL, version diff,
+lineage, and revocation.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,36 +17,43 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (DatasetManager, HumanTask, HumanTaskQueue,
-                        MemoryBackend, ObjectStore, Pipeline, Record,
-                        RevocationEngine, Workflow, WorkflowManager,
-                        component)
+from repro import Platform
+from repro.core import (HumanTask, HumanTaskQueue, Pipeline, Record,
+                        Workflow, attr, component, parse_where)
 from repro.data import PackComponent, TokenizeComponent
 
-# --- platform --------------------------------------------------------------
-dm = DatasetManager(ObjectStore(MemoryBackend()))
-wm = WorkflowManager(dm, worker_slots=4)
+# --- platform: one front door over the storage engine -----------------------
+plat = Platform.open(actor="ingest-bot", worker_slots=4)
 
 # --- pipeline A: ingest -----------------------------------------------------
+raw = plat.dataset("corpus/raw")
 docs = [Record(f"doc-{i:03d}", f"training document number {i} ".encode() * 8,
-               {"source": "crawl"}) for i in range(32)]
-commit_a = dm.check_in("corpus/raw", docs, actor="ingest-bot",
-                       message="pipeline A: nightly crawl",
-                       version_tags=["nightly"])
-dm.tag_dataset("corpus/raw", "text", actor="ingest-bot")
+               {"source": "crawl", "idx": i}) for i in range(32)]
+commit_a = raw.check_in(docs, message="pipeline A: nightly crawl",
+                        version_tags=["nightly"])
+raw.tag("text")
 print(f"A: ingested {len(docs)} docs -> version {commit_a.commit_id[:12]}")
-print(f"   query by tag: {dm.query_datasets(tags=['text'])}")
+print(f"   query by tag: {[d.name for d in plat.datasets(tags=['text'])]}")
 
 # --- pipeline X: transform for training --------------------------------------
-wm.register(Workflow(
+plat.register(Workflow(
     name="X-tokenize",
     pipeline=Pipeline([TokenizeComponent(), PackComponent(seq_len=128)]),
     input_dataset="corpus/raw", output_dataset="corpus/train-ready",
     n_shards=4,
 ))
-run_x = wm.run("X-tokenize")
-snap1 = dm.checkout("corpus/train-ready", actor="trainer")
+run_x = plat.run("X-tokenize")
+snap1 = plat.dataset("corpus/train-ready").checkout(actor="trainer")
 print(f"X: {run_x.state}, snapshot 1 has {len(snap1)} packed sequences")
+
+# --- declarative queries: serializable, fingerprinted, cached ----------------
+q = (attr("source") == "crawl") & (attr("idx") < 8)
+assert q.fingerprint() == parse_where("source=crawl & idx<8").fingerprint()
+early_a = raw.checkout(where=q, actor="trainer")
+early_b = raw.checkout(where="source=crawl & idx<8", actor="trainer")
+assert early_a.snapshot_id == early_b.snapshot_id  # cache hit, one snapshot
+print(f"query: {len(early_a)} early docs, digest {q.fingerprint()[:12]}, "
+      "identical checkouts deduped onto one snapshot")
 
 # --- pipeline Z: sample for labeling (human work unit) -------------------------
 queue = HumanTaskQueue()
@@ -54,48 +64,49 @@ def sample(rec):
     return int(rec.record_id.split("-")[1]) % 8 == 0
 
 
-wm.register(Workflow(
+plat.register(Workflow(
     name="Z-labeling",
     pipeline=Pipeline([sample, HumanTask(queue, task_id="label-round-1")]),
     input_dataset="corpus/raw", output_dataset="corpus/labeled",
     n_shards=1,
 ))
-run_z = wm.run("Z-labeling")
+run_z = plat.run("Z-labeling")
 print(f"Z: parked as {run_z.state}, {len(queue.pending('label-round-1'))} "
       "item(s) await human labels")
 for rec in queue.pending("label-round-1"):
     queue.complete("label-round-1", rec.record_id, rec.data, label="good")
-run_z = wm.resume(run_z.run_id)
+run_z = plat.resume(run_z.run_id)
 print(f"Z: resumed -> {run_z.state}, snapshot 2 committed: "
       f"{run_z.output_commit[:12]}")
 
-# --- pipeline Y: transform + commit back (event-triggered) ----------------------
+# --- pipeline Y: transform + commit back (event-triggered, query input) --------
 @component(kind="filter", name="drop_short")
 def drop_short(rec):
     return len(rec.data) > 100
 
 
-wm.register(Workflow(
+plat.register(Workflow(
     name="Y-clean", pipeline=Pipeline([drop_short]),
-    input_dataset="corpus/raw", output_dataset="corpus/raw",
+    input_dataset="corpus/raw", input_where=parse_where("idx>=0"),
+    output_dataset="corpus/raw",
     output_message="pipeline Y: cleaned (snapshot 3 committed back)",
     trigger_on_commit_to="corpus/labeled",
 ))
 # the trigger: a new version of corpus/labeled fires Y automatically
-dm.check_in("corpus/labeled", [Record("extra", b"new label data", {})],
-            actor="labeler")
-run_y = wm.runs("Y-clean")[-1]
+plat.dataset("corpus/labeled").check_in(
+    [Record("extra", b"new label data", {})], actor="labeler")
+run_y = plat.workflows.runs("Y-clean")[-1]
 print(f"Y: trigger={run_y.trigger} -> {run_y.state}, new corpus/raw head")
-d = dm.diff("corpus/raw", commit_a.commit_id, "main", actor="auditor")
+d = raw.diff(commit_a.commit_id, "main", actor="auditor")
 print(f"   version diff A..HEAD: {d.summary()}")
 
 # --- lineage + revocation --------------------------------------------------------
-print(f"lineage: snapshot1 ancestors -> {len(dm.lineage.ancestors(snap1.snapshot_id))} nodes")
-report = RevocationEngine(dm).revoke("doc-008", actor="ingest-bot",
-                                     reason="user deletion request")
+print(f"lineage: snapshot1 ancestors -> "
+      f"{len(plat.ancestors(snap1.snapshot_id))} nodes")
+report = plat.revoke("doc-008", reason="user deletion request")
 print(f"revocation of doc-008: {len(report.affected_versions)} versions "
       f"rewritten, {len(report.blobs_deleted)} blob(s) erased, "
       f"{len(report.downstream_snapshots + report.downstream_other)} "
       "downstream artifacts flagged")
-assert "doc-008" not in dm.checkout("corpus/raw", actor="auditor").record_ids()
+assert "doc-008" not in raw.checkout(actor="auditor").record_ids()
 print("OK: quickstart complete")

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + platform benchmark smoke run.
+# Usage: ./scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "WARNING: hypothesis not installed — property tests will SKIP." >&2
+    echo "         pip install -r requirements-dev.txt for full coverage." >&2
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== platform bench (smoke) =="
+PYTHONPATH=src python benchmarks/platform_bench.py --smoke
+
+echo "CI OK"

@@ -14,3 +14,7 @@ Subpackages:
 """
 
 __version__ = "0.1.0"
+
+from .platform import DatasetHandle, Platform, VersionHandle  # noqa: E402
+
+__all__ = ["Platform", "DatasetHandle", "VersionHandle", "__version__"]

@@ -1,12 +1,21 @@
 """Platform CLI — the paper's "Users can use a command-line interface (CLI)
 or other user interface to check-in data".
 
+Every command opens the repository through :class:`repro.Platform`
+(``Platform.open(repo_dir)``) and operates on dataset handles, so the CLI,
+library callers, and workflows share one code path.  ``--where`` takes the
+declarative query grammar of :func:`repro.core.query.parse_where` —
+the same serializable algebra workflows use for their input queries, so a
+query shown in a run report can be pasted back into the CLI verbatim.
+
 A repository lives in a directory (FileBackend CAS).  Actors are passed via
 ``--actor`` (or $REPRO_ACTOR); ACL is enforced on every operation.
 
 Examples:
     repro-cli --repo /tmp/repo check-in mydata file1.txt file2.bin -m "v1"
     repro-cli --repo /tmp/repo checkout mydata --out /tmp/restore
+    repro-cli --repo /tmp/repo checkout mydata --where 'lang=en & split!=test'
+    repro-cli --repo /tmp/repo checkout mydata --where 'size>=1024 | tags~=gold*'
     repro-cli --repo /tmp/repo tag mydata golden
     repro-cli --repo /tmp/repo datasets --tags text
     repro-cli --repo /tmp/repo log mydata
@@ -24,64 +33,75 @@ import os
 import sys
 from typing import List, Optional
 
-from .core import (AccessController, DatasetManager, FileBackend,
-                   ObjectStore, Record, RevocationEngine)
+from .core import NotFoundError, QueryParseError, Record, parse_where
+from .core.query import ALL
+from .platform import Platform
 
 __all__ = ["main"]
 
 
-def _dm(repo: str) -> DatasetManager:
-    store = ObjectStore(FileBackend(repo))
-    return DatasetManager(store)
+def _open(args) -> Platform:
+    return Platform.open(args.repo, actor=args.actor)
 
 
-def cmd_check_in(dm, args) -> int:
+def _parse_where_args(where_args: Optional[List[str]]):
+    """AND together every repeated ``--where`` expression."""
+    query = None
+    for text in where_args or []:
+        q = parse_where(text)
+        query = q if query is None else query & q
+    return query
+
+
+def cmd_check_in(plat: Platform, args) -> int:
     records = []
     for path in args.files:
         with open(path, "rb") as f:
             data = f.read()
         records.append(Record(os.path.basename(path), data,
                               {"src_path": os.path.abspath(path)}))
-    c = dm.check_in(args.dataset, records, actor=args.actor,
-                    message=args.message or "",
-                    version_tags=args.tag or [])
+    c = plat.dataset(args.dataset).check_in(
+        records, message=args.message or "", version_tags=args.tag or [])
     print(f"checked in {len(records)} record(s) -> {c.commit_id}")
     return 0
 
 
-def cmd_checkout(dm, args) -> int:
-    attrs = dict(kv.split("=", 1) for kv in (args.where or []))
-    snap = dm.checkout(args.dataset, actor=args.actor, rev=args.rev,
-                       attrs_equal=attrs or None, limit=args.limit)
+def cmd_checkout(plat: Platform, args) -> int:
+    plan = plat.dataset(args.dataset).plan(
+        rev=args.rev, where=_parse_where_args(args.where), limit=args.limit)
     if args.out:
         os.makedirs(args.out, exist_ok=True)
-        for rid in snap.record_ids():
-            with open(os.path.join(args.out, rid), "wb") as f:
-                f.write(snap.read(rid))
-        print(f"materialized {len(snap)} record(s) to {args.out}")
+        # entries() caches the scan, so the snapshot() below reuses it
+        for entry in plan.entries():
+            with open(os.path.join(args.out, entry.record_id), "wb") as f:
+                f.write(plat.store.get_blob(entry.blob))
+        print(f"materialized {len(plan.entries())} record(s) to {args.out}")
+        snap = plan.snapshot()
     else:
+        snap = plan.snapshot()
         for rid in snap.record_ids():
             print(rid, json.dumps(dict(snap.attrs(rid))))
-    print(f"snapshot {snap.snapshot_id} @ {snap.commit_id[:12]}")
+    digest = plan.query_digest()
+    print(f"snapshot {snap.snapshot_id} @ {snap.commit_id[:12]} "
+          f"(query {digest[:12] if digest else 'opaque'})")
     return 0
 
 
-def cmd_datasets(dm, args) -> int:
-    for name in dm.query_datasets(args.glob, tags=args.tags or []):
-        info = dm.dataset_info(name) or {}
-        print(name, json.dumps(info.get("tags", [])))
+def cmd_datasets(plat: Platform, args) -> int:
+    for ds in plat.datasets(args.glob, tags=args.tags or []):
+        info = ds.info() or {}
+        print(ds.name, json.dumps(info.get("tags", [])))
     return 0
 
 
-def cmd_log(dm, args) -> int:
-    head = dm.versions.resolve(args.dataset, args.rev)
-    for c in dm.versions.log(head, limit=args.limit):
+def cmd_log(plat: Platform, args) -> int:
+    for c in plat.dataset(args.dataset).log(rev=args.rev, limit=args.limit):
         print(f"{c.commit_id[:12]} {c.author:12s} {c.message}")
     return 0
 
 
-def cmd_diff(dm, args) -> int:
-    d = dm.diff(args.dataset, args.rev_a, args.rev_b, actor=args.actor)
+def cmd_diff(plat: Platform, args) -> int:
+    d = plat.dataset(args.dataset).diff(args.rev_a, args.rev_b)
     print(d.summary())
     for rid in d.added:
         print(f"A {rid}")
@@ -92,42 +112,49 @@ def cmd_diff(dm, args) -> int:
     return 0
 
 
-def cmd_tag(dm, args) -> int:
-    dm.tag_version(args.dataset, args.rev, args.tag, actor=args.actor)
+def cmd_tag(plat: Platform, args) -> int:
+    plat.dataset(args.dataset).tag_version(args.rev, args.tag)
     print(f"tagged {args.dataset}@{args.rev} as {args.tag}")
     return 0
 
 
-def cmd_lineage(dm, args) -> int:
-    node = dm.lineage.node(args.node)
+def cmd_query(plat: Platform, args) -> int:
+    """Inspect a --where expression: parsed JSON + stable fingerprint."""
+    query = _parse_where_args(args.where) or ALL
+    print(json.dumps(query.to_json(), indent=2))
+    print(f"fingerprint {query.fingerprint()}")
+    return 0
+
+
+def cmd_lineage(plat: Platform, args) -> int:
+    node = plat.lineage.node(args.node)
     if node is None:
         print(f"unknown node {args.node!r}", file=sys.stderr)
         return 1
     print("node:", json.dumps(node.to_json(), indent=2))
     print("ancestors:")
-    for n in dm.lineage.ancestors(args.node):
+    for n in plat.ancestors(args.node):
         print("  <-", n)
     print("descendants:")
-    for n in dm.lineage.descendants(args.node):
+    for n in plat.descendants(args.node):
         print("  ->", n)
     return 0
 
 
-def cmd_revoke(dm, args) -> int:
-    report = RevocationEngine(dm).revoke(args.record, actor=args.actor,
-                                         reason=args.reason or "")
+def cmd_revoke(plat: Platform, args) -> int:
+    report = plat.revoke(args.record, reason=args.reason or "")
     print(json.dumps(report.to_json(), indent=2))
     return 0
 
 
-def cmd_grant(dm, args) -> int:
-    dm.acl.grant(args.subject, args.pattern, args.action)
+def cmd_grant(plat: Platform, args) -> int:
+    plat.grant(args.subject, args.pattern, args.action)
     print(f"granted {args.action} on {args.pattern!r} to {args.subject}")
     return 0
 
 
-def cmd_gc(dm, args) -> int:
-    n = dm.gc()
+def cmd_gc(plat: Platform, args) -> int:
+    n = plat.gc()
     print(f"collected {n} unreachable object(s)")
     return 0
 
@@ -151,9 +178,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--rev", default="main")
     p.add_argument("--out")
     p.add_argument("--where", action="append",
-                   help="attr=value filter (repeatable)")
+                   help="query expression, e.g. 'lang=en & split!=test' "
+                        "(repeatable; repeats are ANDed). Bare values are "
+                        "coerced to int/float/bool; quote to force a "
+                        "string or to include spaces: \"k='some value'\"")
     p.add_argument("--limit", type=int)
     p.set_defaults(fn=cmd_checkout)
+
+    p = sub.add_parser("query",
+                       help="parse a --where expression and print its "
+                            "JSON + fingerprint")
+    p.add_argument("--where", action="append", required=True)
+    p.set_defaults(fn=cmd_query)
 
     p = sub.add_parser("datasets")
     p.add_argument("--glob", default="*")
@@ -197,8 +233,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_gc)
 
     args = ap.parse_args(argv)
-    dm = _dm(args.repo)
-    return args.fn(dm, args)
+    plat = _open(args)
+    try:
+        return args.fn(plat, args)
+    except QueryParseError as e:
+        print(f"error: bad --where expression: {e}", file=sys.stderr)
+        return 2
+    except NotFoundError as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 1
 
 
 if __name__ == "__main__":

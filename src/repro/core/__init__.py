@@ -1,6 +1,8 @@
 """repro.core — the paper's contribution: a dataset management platform.
 
-Public surface:
+The supported public entry point is :class:`repro.platform.Platform`
+(``Platform.open(...)`` + dataset/version handles).  The pieces below are
+its engine, importable directly for embedding and tests:
 
 - Storage engine (source of truth): :class:`ObjectStore` over pluggable
   :class:`StorageBackend`s (memory / filesystem).
@@ -15,8 +17,10 @@ Public surface:
 """
 
 from .acl import AccessController, Action, PermissionError_
-from .dataset import DatasetManager, Record, Snapshot
+from .dataset import CheckoutPlan, DatasetManager, Record, Snapshot
 from .lineage import EdgeKind, LineageGraph, NodeKind
+from .query import (ALL, And, Cmp, Not, Or, Query, QueryParseError, attr,
+                    parse_where, record_id_in, tag_in)
 from .revocation import RevocationEngine, RevocationReport, RevokedError
 from .store import (BlobRef, FileBackend, IntegrityError, MemoryBackend,
                     NotFoundError, ObjectStore, StorageBackend)
@@ -31,7 +35,9 @@ from .workflow import (RunState, ShardReport, Workflow, WorkflowManager,
 
 __all__ = [
     "AccessController", "Action", "PermissionError_",
-    "DatasetManager", "Record", "Snapshot",
+    "CheckoutPlan", "DatasetManager", "Record", "Snapshot",
+    "ALL", "And", "Cmp", "Not", "Or", "Query", "QueryParseError", "attr",
+    "parse_where", "record_id_in", "tag_in",
     "EdgeKind", "LineageGraph", "NodeKind",
     "RevocationEngine", "RevocationReport", "RevokedError",
     "BlobRef", "FileBackend", "IntegrityError", "MemoryBackend",

@@ -12,19 +12,23 @@ conditions.  The type of data stored is unrestricted."
 from __future__ import annotations
 
 import fnmatch
+import hashlib
+import json
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
-                    Sequence, Tuple, Union)
+from typing import (Callable, Dict, Iterable, Iterator, List, Mapping,
+                    Optional, Sequence, Tuple, Union)
 
 from .acl import AccessController, Action
 from .lineage import EdgeKind, LineageGraph, NodeKind
-from .store import BlobRef, MemoryBackend, ObjectStore
+from .query import ALL, Cmp, Query, as_query
+from .store import BlobRef, MemoryBackend, NotFoundError, ObjectStore
 from .versioning import (Commit, Manifest, RecordEntry, VersionDiff,
-                         VersionStore)
+                         VersionStore, diff_manifests)
 
-__all__ = ["Record", "Snapshot", "DatasetManager", "version_node_id"]
+__all__ = ["Record", "Snapshot", "CheckoutPlan", "DatasetManager",
+           "version_node_id"]
 
 
 def version_node_id(dataset: str, commit_id: str) -> str:
@@ -97,8 +101,149 @@ class Snapshot:
 Predicate = Callable[[RecordEntry], bool]
 
 
+class CheckoutPlan:
+    """A lazy, declarative checkout: (dataset, commit, query, shard, limit).
+
+    The plan streams manifest entries through the query without building
+    intermediate lists, so a trainer can feed
+    :class:`~repro.data.loader.ShardedSnapshotLoader` directly from a plan
+    (it duck-types the Snapshot read surface: ``record_ids`` / ``read`` /
+    ``attrs`` / ``content_digest``).  Call :meth:`snapshot` to register the
+    checkout in lineage; identical plans over the same commit dedupe onto a
+    single snapshot node via the plan digest.
+    """
+
+    def __init__(
+        self,
+        dm: "DatasetManager",
+        dataset: str,
+        commit_id: str,
+        rev: str,
+        query: Optional[Query] = None,
+        limit: Optional[int] = None,
+        shard: Optional[Tuple[int, int]] = None,
+    ) -> None:
+        if shard is not None:
+            idx, n = shard
+            if not (0 <= idx < n):
+                raise ValueError(f"bad shard spec {shard!r}")
+        self._dm = dm
+        self.dataset = dataset
+        self.commit_id = commit_id
+        self.rev = rev
+        self.query = query if query is not None else ALL
+        self.limit = limit
+        self.shard = tuple(shard) if shard is not None else None
+        self._entries: Optional[List[RecordEntry]] = None
+        self._by_id: Optional[Dict[str, RecordEntry]] = None
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def serializable(self) -> bool:
+        return self.query.serializable
+
+    def to_json(self) -> dict:
+        return {
+            "dataset": self.dataset,
+            "rev": self.rev,
+            "commit": self.commit_id,
+            "query": self.query.to_json(),
+            "limit": self.limit,
+            "shard": list(self.shard) if self.shard else None,
+        }
+
+    def query_digest(self) -> Optional[str]:
+        """Digest of (query, limit, shard) — commit-independent; ``None``
+        for opaque callable predicates (never cached)."""
+        if not self.query.serializable:
+            return None
+        body = {"query": self.query.canonical(), "limit": self.limit,
+                "shard": list(self.shard) if self.shard else None}
+        blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    # -- streaming iteration ---------------------------------------------------
+
+    def iter_entries(self) -> Iterator[RecordEntry]:
+        """Stream matching entries without materializing the manifest list."""
+        if self._entries is not None:
+            yield from self._entries
+            return
+        manifest = self._dm.versions.get_manifest(
+            self._dm.versions.get_commit(self.commit_id).tree)
+        matched = 0
+        emitted = 0
+        for entry in manifest.iter_entries():
+            if not self.query(entry):
+                continue
+            keep = self.shard is None or matched % self.shard[1] == self.shard[0]
+            matched += 1
+            if not keep:
+                continue
+            yield entry
+            emitted += 1
+            if self.limit is not None and emitted >= self.limit:
+                return
+
+    def entries(self) -> List[RecordEntry]:
+        if self._entries is None:
+            self._entries = list(self.iter_entries())
+            self._by_id = {e.record_id: e for e in self._entries}
+        return list(self._entries)
+
+    def __len__(self) -> int:
+        return len(self.entries())
+
+    def __iter__(self):
+        for e in self.iter_entries():
+            yield Record(e.record_id, self._dm.store.get_blob(e.blob),
+                         dict(e.attrs))
+
+    # -- Snapshot-compatible read surface (feeds the loader directly) ---------
+
+    def record_ids(self) -> List[str]:
+        return [e.record_id for e in self.entries()]
+
+    def _entry(self, record_id: str) -> RecordEntry:
+        self.entries()
+        assert self._by_id is not None
+        return self._by_id[record_id]
+
+    def attrs(self, record_id: str) -> Mapping[str, object]:
+        return self._entry(record_id).attrs
+
+    def read(self, record_id: str) -> bytes:
+        return self._dm.store.get_blob(self._entry(record_id).blob)
+
+    def content_digest(self) -> str:
+        h = hashlib.sha256()
+        for e in self.entries():  # cached — the loader calls this + ids
+            h.update(e.record_id.encode())
+            h.update(e.blob.digest.encode())
+        return h.hexdigest()
+
+    # -- materialization -------------------------------------------------------
+
+    def snapshot(self, register: bool = True) -> Snapshot:
+        """Materialize a :class:`Snapshot`; register=True records lineage,
+        deduping onto an existing snapshot node for identical plans."""
+        return self._dm._materialize(self, register=register)
+
+    def __repr__(self) -> str:
+        return (f"CheckoutPlan({self.dataset}@{self.rev}, "
+                f"commit={self.commit_id[:12]}, "
+                f"digest={(self.query_digest() or 'opaque')[:12]})")
+
+
 class DatasetManager:
-    """Core module #1 of the platform (Fig. 2)."""
+    """Core module #1 of the platform (Fig. 2).
+
+    .. note:: new code should go through :class:`repro.platform.Platform`
+       and its dataset handles — that facade is the supported public
+       surface; the methods here are its engine (and the deprecation shim
+       for pre-facade callers).
+    """
 
     def __init__(
         self,
@@ -192,11 +337,12 @@ class DatasetManager:
         self._ensure_dataset(dataset, actor)
 
         base_id = base or self.versions.get_branch(dataset, branch)
-        manifest = (
-            self.versions.get_manifest(self.versions.get_commit(base_id).tree).copy()
+        base_manifest = (
+            self.versions.get_manifest(self.versions.get_commit(base_id).tree)
             if base_id
             else Manifest()
         )
+        manifest = base_manifest.copy()
         new_ids: List[str] = []
         for rec in records:
             ref = self.store.put_blob(rec.data)
@@ -217,8 +363,11 @@ class DatasetManager:
         for tag in version_tags:
             self.versions.set_tag(dataset, tag, commit.commit_id)
 
-        # Record-containment index (drives revocation without full scans).
-        self._index_records(dataset, commit.commit_id, manifest)
+        # Record-containment index (drives revocation without full scans):
+        # only the records this commit actually added/changed/removed are
+        # indexed, so the blob grows O(delta) per commit, not O(records).
+        self._index_records(dataset, commit.commit_id,
+                            diff_manifests(base_manifest, manifest))
 
         # Lineage: version node + derivation/production edges.
         vnode = version_node_id(dataset, commit.commit_id)
@@ -237,53 +386,140 @@ class DatasetManager:
             fn(dataset, commit)
         return commit
 
-    def _index_records(self, dataset: str, commit_id: str, manifest: Manifest) -> None:
+    def _index_records(self, dataset: str, commit_id: str,
+                       delta: Union[VersionDiff, Manifest]) -> None:
+        """Event index: record -> commits where it was added/changed or
+        removed.  Containment at any commit is reconstructed by walking the
+        commit DAG forward from add events (:meth:`versions_with_record`),
+        so unchanged records cost nothing per commit.
+
+        A full :class:`Manifest` is also accepted (compat for out-of-band
+        commits, e.g. merges): every record counts as an add event.
+        """
+        if isinstance(delta, Manifest):
+            delta = VersionDiff(added=delta.record_ids())
+        if delta.is_empty:
+            return
         key = f"recindex/{dataset}"
-        idx: Dict[str, List[str]] = self.store.get_meta(key, default={})
-        for rid in manifest.record_ids():
-            idx.setdefault(rid, []).append(commit_id)
+        idx = self.store.get_meta(key, default=None)
+        if idx is None:
+            idx = {"v": 2, "added": {}, "removed": {}}
+        elif "added" not in idx:
+            idx = self._migrate_legacy_index(dataset, idx)
+        for rid in delta.added + delta.modified:
+            cids = idx["added"].setdefault(rid, [])
+            if commit_id not in cids:
+                cids.append(commit_id)
+        for rid in delta.removed:
+            cids = idx["removed"].setdefault(rid, [])
+            if commit_id not in cids:
+                cids.append(commit_id)
         self.store.put_meta(key, idx)
 
+    def _migrate_legacy_index(self, dataset: str, legacy: Dict) -> dict:
+        """One-time upgrade of a pre-delta flat index (rid -> [commits]).
+
+        The flat lists are *exact* containment with no removal events, so
+        they must NOT seed the forward DAG walk (that would extend records
+        past pre-migration deletions).  They are kept verbatim in a
+        ``legacy`` bucket; records still live on some branch head get a
+        fresh add event there so post-migration commits are covered.
+        """
+        idx = {"v": 2, "added": {}, "removed": {}, "legacy": legacy}
+        for branch in self.versions.list_branches(dataset):
+            head = self.versions.get_branch(dataset, branch)
+            if head is None:
+                continue
+            try:
+                man = self.versions.get_manifest(
+                    self.versions.get_commit(head).tree)
+            except NotFoundError:
+                continue
+            for rid in legacy:
+                if rid in man:
+                    cids = idx["added"].setdefault(rid, [])
+                    if head not in cids:
+                        cids.append(head)
+        return idx
+
     # ------------------------------------------------------------------ checkout
+
+    def plan_checkout(
+        self,
+        dataset: str,
+        actor: str,
+        rev: str = "main",
+        where: Union[Query, Predicate, str, dict, None] = None,
+        attrs_equal: Optional[Mapping[str, object]] = None,
+        limit: Optional[int] = None,
+        shard: Optional[Tuple[int, int]] = None,
+    ) -> CheckoutPlan:
+        """Build a lazy :class:`CheckoutPlan` for a queried dataset version.
+
+        "Users or workflows can checkout data by specifying query
+        conditions." — ``where`` is a declarative
+        :class:`~repro.core.query.Query` (also accepted: a CLI string, a
+        query-JSON dict, or — deprecated — a bare callable predicate);
+        ``attrs_equal`` is the exact-match shorthand, folded into the query.
+        """
+        self.acl.check(actor, Action.READ, dataset, note=f"checkout:{rev}")
+        commit_id = self.versions.resolve(dataset, rev)
+        query = as_query(where)
+        if attrs_equal:
+            eq = [Cmp(k, "eq", v) for k, v in sorted(attrs_equal.items())]
+            for c in eq:
+                query = c if query is None else query & c
+        return CheckoutPlan(self, dataset, commit_id, rev, query=query,
+                            limit=limit, shard=shard)
 
     def checkout(
         self,
         dataset: str,
         actor: str,
         rev: str = "main",
-        where: Optional[Predicate] = None,
+        where: Union[Query, Predicate, str, dict, None] = None,
         attrs_equal: Optional[Mapping[str, object]] = None,
         limit: Optional[int] = None,
         register_snapshot: bool = True,
     ) -> Snapshot:
         """Materialize (a queried subset of) a dataset version.
 
-        "Users or workflows can checkout data by specifying query
-        conditions." — ``where`` is an arbitrary predicate over record
-        entries; ``attrs_equal`` is the common exact-match shorthand.
+        Shim over :meth:`plan_checkout` + :meth:`CheckoutPlan.snapshot`;
+        prefer ``Platform.open(...).dataset(name).checkout(...)``.
         """
-        self.acl.check(actor, Action.READ, dataset, note=f"checkout:{rev}")
-        commit_id = self.versions.resolve(dataset, rev)
-        manifest = self.versions.get_manifest(self.versions.get_commit(commit_id).tree)
-        entries = manifest.entries()
-        if attrs_equal:
-            entries = [
-                e for e in entries
-                if all(e.attrs.get(k) == v for k, v in attrs_equal.items())
-            ]
-        if where is not None:
-            entries = [e for e in entries if where(e)]
-        if limit is not None:
-            entries = entries[:limit]
-        snap_id = f"snapshot:{uuid.uuid4().hex[:16]}"
-        snap = Snapshot(snap_id, dataset, commit_id, entries, self.store)
-        if register_snapshot:
-            self.lineage.add_node(snap_id, NodeKind.SNAPSHOT,
-                                  dataset=dataset, commit=commit_id,
-                                  n_records=len(entries),
-                                  content=snap.content_digest())
-            self.lineage.add_edge(snap_id, version_node_id(dataset, commit_id),
-                                  EdgeKind.DERIVED_FROM)
+        plan = self.plan_checkout(dataset, actor, rev=rev, where=where,
+                                  attrs_equal=attrs_equal, limit=limit)
+        return plan.snapshot(register=register_snapshot)
+
+    def _materialize(self, plan: CheckoutPlan, register: bool = True) -> Snapshot:
+        """Turn a plan into a Snapshot, deduping lineage registration.
+
+        The snapshot id is a pure function of ``(dataset, commit_id,
+        query_digest)``, so the dedup "cache" is simply: does that lineage
+        node already exist?  No side-band cache state to race or go stale.
+        """
+        digest = plan.query_digest()
+        if digest is not None:
+            sid_body = f"{plan.dataset}:{plan.commit_id}:{digest}"
+            snap_id = "snapshot:" + hashlib.sha256(
+                sid_body.encode()).hexdigest()[:16]
+            if register and self.lineage.node(snap_id) is not None:
+                return Snapshot(snap_id, plan.dataset, plan.commit_id,
+                                plan.entries(), self.store)
+        else:
+            snap_id = f"snapshot:{uuid.uuid4().hex[:16]}"
+        entries = plan.entries()
+        snap = Snapshot(snap_id, plan.dataset, plan.commit_id, entries,
+                        self.store)
+        if register:
+            self.lineage.add_node(
+                snap_id, NodeKind.SNAPSHOT,
+                dataset=plan.dataset, commit=plan.commit_id,
+                n_records=len(entries), content=snap.content_digest(),
+                query=digest)
+            self.lineage.add_edge(
+                snap_id, version_node_id(plan.dataset, plan.commit_id),
+                EdgeKind.DERIVED_FROM)
             self.lineage.flush()
         return snap
 
@@ -310,13 +546,74 @@ class DatasetManager:
         self.acl.check(actor, Action.WRITE, dataset, note=f"tag:{tag}")
         self.versions.set_tag(dataset, tag, self.versions.resolve(dataset, rev))
 
+    def _commit_children(
+        self, dataset: str
+    ) -> Tuple[Dict[str, List[str]], set]:
+        """Forward adjacency of the commit DAG + the set of merge commits."""
+        children: Dict[str, List[str]] = {}
+        merges: set = set()
+        for cid in self.versions.list_commits(dataset):
+            try:
+                c = self.versions.get_commit(cid)
+            except NotFoundError:
+                continue
+            if len(c.parents) > 1:
+                merges.add(cid)
+            for p in c.parents:
+                children.setdefault(p, []).append(cid)
+        return children, merges
+
+    def _manifest_contains(self, commit_id: str, record_id: str) -> bool:
+        try:
+            man = self.versions.get_manifest(
+                self.versions.get_commit(commit_id).tree)
+        except NotFoundError:
+            return False
+        return record_id in man
+
     def versions_with_record(self, record_id: str) -> List[Tuple[str, str]]:
-        """(dataset, commit_id) pairs whose manifests contain the record."""
+        """(dataset, commit_id) pairs whose manifests contain the record.
+
+        Containment = forward walk over the commit DAG from each commit
+        that added/changed the record, pruned at commits that removed it.
+        Merge commits are created outside :meth:`check_in` (no delta
+        events), so containment there is verified against the manifest.
+        Pre-migration ``legacy`` entries are exact containment lists.
+        """
         out: List[Tuple[str, str]] = []
         for name in self.list_datasets():
             idx = self.store.get_meta(f"recindex/{name}", default={})
-            for cid in idx.get(record_id, []):
-                out.append((name, cid))
+            if "added" in idx:
+                containing = set(
+                    idx.get("legacy", {}).get(record_id, []))
+                added = idx["added"].get(record_id, [])
+                if added:
+                    removed = set(
+                        idx.get("removed", {}).get(record_id, []))
+                    children, merges = self._commit_children(name)
+                    frontier = [c for c in added if c not in removed]
+                    seen: set = set()
+                    while frontier:
+                        cid = frontier.pop()
+                        if cid in seen:
+                            continue
+                        seen.add(cid)
+                        if cid in merges and not self._manifest_contains(
+                                cid, record_id):
+                            continue  # merge resolved to drop the record
+                        containing.add(cid)
+                        frontier.extend(c for c in children.get(cid, [])
+                                        if c not in removed)
+                if containing:
+                    out.extend((name, cid)
+                               for cid in self.versions.list_commits(name)
+                               if cid in containing)
+            else:  # legacy flat index: rid -> [containing commits]
+                seen = set()
+                for cid in idx.get(record_id, []):
+                    if cid not in seen:
+                        seen.add(cid)
+                        out.append((name, cid))
         return out
 
     def gc(self) -> int:

@@ -105,13 +105,17 @@ class MemoryBackend(StorageBackend):
             self._data[key] = bytes(data)
 
     def get(self, key: str) -> bytes:
-        try:
-            return self._data[key]
-        except KeyError:
-            raise NotFoundError(key) from None
+        # Reads take the lock too: the workflow manager's thread pool hits
+        # this dict concurrently with writers, and unlocked reads can tear.
+        with self._lock:
+            try:
+                return self._data[key]
+            except KeyError:
+                raise NotFoundError(key) from None
 
     def exists(self, key: str) -> bool:
-        return key in self._data
+        with self._lock:
+            return key in self._data
 
     def delete(self, key: str) -> None:
         with self._lock:

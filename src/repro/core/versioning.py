@@ -81,6 +81,11 @@ class Manifest:
     def entries(self) -> List[RecordEntry]:
         return [self._entries[rid] for rid in self.record_ids()]
 
+    def iter_entries(self) -> Iterable[RecordEntry]:
+        """Stream entries in record-id order without building a list copy."""
+        for rid in sorted(self._entries):
+            yield self._entries[rid]
+
     def to_json(self) -> dict:
         return {"records": [e.to_json() for e in self.entries()]}
 

@@ -51,12 +51,20 @@ class RunState:
 
 @dataclass
 class Workflow:
-    """A registered workflow: input query -> pipeline -> output spec."""
+    """A registered workflow: input query -> pipeline -> output spec.
+
+    ``input_where`` is a declarative :class:`~repro.core.query.Query` (a
+    CLI-style string or query-JSON dict also works — same algebra the CLI
+    uses, so a workflow's input query can be logged, fingerprinted, and
+    reproduced from the command line verbatim).  ``input_attrs_equal`` is
+    the legacy exact-match shorthand; both are ANDed if given.
+    """
 
     name: str
     pipeline: Pipeline
     input_dataset: str
     input_rev: str = "main"
+    input_where: Optional[object] = None
     input_attrs_equal: Optional[Mapping[str, object]] = None
     # If set, output records are checked in as a new version of this dataset
     # ("the new version of data in snapshot 3 is committed to the data
@@ -135,6 +143,9 @@ class WorkflowManager:
         self._timers: List[dict] = []
         self._lock = threading.Lock()
         dm.on_commit(self._on_commit)
+        # Backref so facades over the same manager reuse one WorkflowManager
+        # instead of stacking commit listeners (double-firing triggers).
+        dm._workflow_manager = self
 
     # ------------------------------------------------------------ registration
 
@@ -219,10 +230,11 @@ class WorkflowManager:
         run.started_at = time.time()
         lineage = self.dm.lineage
         try:
-            snap = self.dm.checkout(
+            plan = self.dm.plan_checkout(
                 wf.input_dataset, wf.actor, rev=wf.input_rev,
-                attrs_equal=wf.input_attrs_equal,
+                where=wf.input_where, attrs_equal=wf.input_attrs_equal,
             )
+            snap = plan.snapshot()
             run.input_commit = snap.commit_id
             run.input_snapshot = snap.snapshot_id
 
@@ -230,11 +242,11 @@ class WorkflowManager:
             lineage.add_node(run_node, NodeKind.WORKFLOW_RUN,
                              workflow=wf.name,
                              pipeline=wf.pipeline.fingerprint(),
+                             input_query=plan.query_digest(),
                              trigger=run.trigger)
             lineage.add_edge(snap.snapshot_id, run_node, EdgeKind.INPUT_TO)
             lineage.flush()
 
-            records = snap.entries()
             outputs = self._run_sharded(wf, run, snap)
 
             run.output_records = outputs

@@ -1,5 +1,13 @@
-"""Sharded, deterministic, resumable loader: platform snapshot -> device
+"""Sharded, deterministic, resumable loader: platform checkout -> device
 batches.
+
+Feed it a materialized :class:`~repro.core.dataset.Snapshot` or — the
+preferred, allocation-free path — a lazy
+:class:`~repro.core.dataset.CheckoutPlan` straight from
+``Platform.open(...).dataset(name).plan(where=...)``: the loader only needs
+the ``record_ids`` / ``read`` / ``content_digest`` read surface, which a
+plan streams from the manifest without materializing a snapshot or
+registering lineage for every restart.
 
 This is the handoff between the paper's data plane and the TPU fleet:
 
@@ -30,10 +38,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dataset import Snapshot
+from typing import Union
+
+from ..core.dataset import CheckoutPlan, Snapshot
 from .components import decode_packed
 
 __all__ = ["ShardedSnapshotLoader", "LoaderState"]
+
+SnapshotLike = Union[Snapshot, CheckoutPlan]
 
 LoaderState = Dict[str, Any]
 
@@ -48,7 +60,7 @@ def _order(record_ids: List[str], epoch: int, seed: int) -> List[str]:
 class ShardedSnapshotLoader:
     def __init__(
         self,
-        snapshot: Snapshot,
+        snapshot: SnapshotLike,
         batch_size: int,
         seq_len: int,
         shard_id: int = 0,

@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; kernels
+import the alias from here so the next rename is a one-file fix.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

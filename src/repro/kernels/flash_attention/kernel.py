@@ -166,6 +166,8 @@ def _call(kernel, qt, kt, vt, qseg, kseg, B, Hq, n_q, n_k, block_q, block_k,
           D, group, dtype, interpret):
     from jax.experimental.pallas import tpu as pltpu
 
+    from .._compat import CompilerParams as _CompilerParams
+
     return pl.pallas_call(
         kernel,
         grid=(B, Hq, n_q, n_k),
@@ -186,7 +188,7 @@ def _call(kernel, qt, kt, vt, qseg, kseg, B, Hq, n_q, n_k, block_q, block_k,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

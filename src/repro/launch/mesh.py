@@ -15,17 +15,22 @@ import jax
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kwargs(n):
+    # jax >= 0.5 wants explicit AxisType.Auto; older versions predate the
+    # concept (Auto is the only behavior) and reject the kwarg.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
 def make_local_mesh():
     """Whatever devices exist, as a 1-D data mesh (CPU tests, examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=_auto(1))
+    return jax.make_mesh((n,), ("data",), **_auto_kwargs(1))

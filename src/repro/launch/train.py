@@ -31,9 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
-from ..core import (DatasetManager, MemoryBackend, ObjectStore, Pipeline,
-                    Record, Workflow, WorkflowManager)
+from ..core import Pipeline, Record, Workflow
 from ..core.lineage import NodeKind
+from ..platform import Platform
 from ..data import (PackComponent, ShardedSnapshotLoader, SplitComponent,
                     TokenizeComponent)
 from ..models import RuntimeConfig, build_model
@@ -59,11 +59,11 @@ def synthetic_corpus(n_docs: int = 256, seed: int = 0):
 
 def build_platform(seq_len: int, n_docs: int = 256):
     """Stand up the platform and run the Fig. 1 pipelines."""
-    dm = DatasetManager(ObjectStore(MemoryBackend()))
-    wm = WorkflowManager(dm)
-    dm.check_in("corpus/raw", synthetic_corpus(n_docs), actor="ingest",
-                message="pipeline A: ingest")
-    wm.register(Workflow(
+    plat = Platform.open(actor="trainer")
+    plat.dataset("corpus/raw").check_in(
+        synthetic_corpus(n_docs), actor="ingest",
+        message="pipeline A: ingest")
+    plat.register(Workflow(
         name="tokenize-pack",
         pipeline=Pipeline([SplitComponent(eval_fraction=0.0),
                            TokenizeComponent(),
@@ -72,9 +72,9 @@ def build_platform(seq_len: int, n_docs: int = 256):
         output_dataset="corpus/packed",
         n_shards=2,
     ))
-    run = wm.run("tokenize-pack")
+    run = plat.run("tokenize-pack")
     assert run.state == "SUCCEEDED", run.error
-    return dm, wm, run
+    return plat, run
 
 
 def main(argv=None) -> dict:
@@ -102,9 +102,10 @@ def main(argv=None) -> dict:
                        act_sharding=ActivationSharding(rules))
     model = build_model(cfg, rt)
 
-    dm, wm, wf_run = build_platform(args.seq_len, n_docs=max(
+    plat, wf_run = build_platform(args.seq_len, n_docs=max(
         args.batch * 8, 128))
-    snap = dm.checkout("corpus/packed", actor="trainer")
+    dm = plat.manager
+    snap = plat.dataset("corpus/packed").checkout()
     print(f"platform: snapshot {snap.snapshot_id} with {len(snap)} packs")
 
     loader = ShardedSnapshotLoader(snap, args.batch, args.seq_len)
@@ -170,7 +171,7 @@ def main(argv=None) -> dict:
     anc = dm.lineage.ancestors(checkpoint_node_id(f"checkpoints/{cfg.name}",
                                                   step))
     print(f"lineage ancestors of final checkpoint: {len(anc)} node(s)")
-    return {"losses": losses, "steps": step, "dm": dm,
+    return {"losses": losses, "steps": step, "dm": dm, "platform": plat,
             "checkpoint": cid, "improved": bool(last < first)}
 
 

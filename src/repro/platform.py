@@ -1,0 +1,365 @@
+"""The platform facade — one front door over the storage engine.
+
+The paper describes one coherent system (storage engine as source of truth,
+versioning, access control, workflows, lineage, revocation); this module is
+the single entry point that owns all of it:
+
+>>> from repro import Platform
+>>> from repro.core.query import attr
+>>> plat = Platform.open("/data/repo", actor="alice")     # or open() for RAM
+>>> ds = plat.dataset("speech")
+>>> ds.check_in([Record("r0", b"...", {"lang": "en"})], message="ingest")
+>>> snap = ds.checkout(rev="golden", where=attr("lang") == "en")
+>>> plan = ds.plan(where="lang=en & split!=test", shard=(0, 4))  # lazy
+>>> plat.revoke("r0", reason="user request")
+
+``Platform.open`` accepts a directory path (FileBackend), ``None`` (in-
+memory), a :class:`StorageBackend`, an :class:`ObjectStore`, or an existing
+:class:`DatasetManager` to wrap.  Handles carry the platform's default
+actor so call sites stop threading ``actor=`` through every operation
+(still overridable per call — ACL is enforced on every one).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .core.acl import AccessController
+from .core.dataset import (CheckoutPlan, DatasetManager, Record, Snapshot,
+                           version_node_id)
+from .core.lineage import LineageGraph
+from .core.revocation import RevocationEngine, RevocationReport
+from .core.store import (FileBackend, MemoryBackend, ObjectStore,
+                         StorageBackend)
+from .core.versioning import Commit, Manifest, RecordEntry, VersionDiff
+from .core.workflow import Workflow, WorkflowManager, WorkflowRun
+
+__all__ = ["Platform", "DatasetHandle", "VersionHandle"]
+
+
+class Platform:
+    """Session-style facade owning every platform subsystem.
+
+    Attributes (all live on one shared store):
+
+    - ``store``      — content-addressed :class:`ObjectStore`
+    - ``manager``    — the :class:`DatasetManager` engine
+    - ``versions``   — commit/ref layer
+    - ``acl``        — access controller
+    - ``lineage``    — provenance graph
+    - ``revocation`` — GDPR-delete engine
+    - ``workflows``  — workflow manager (triggers, sharded runs)
+    """
+
+    def __init__(
+        self,
+        manager: DatasetManager,
+        *,
+        actor: str = "platform",
+        worker_slots: int = 8,
+    ) -> None:
+        self.manager = manager
+        self.store = manager.store
+        self.versions = manager.versions
+        self.acl = manager.acl
+        self.lineage = manager.lineage
+        self.actor = actor
+        self.revocation = RevocationEngine(manager)
+        # One WorkflowManager per engine: a second Platform over the same
+        # manager must not register a second commit listener, or commit
+        # triggers fire once per facade (worker_slots then comes from the
+        # first construction).
+        existing = getattr(manager, "_workflow_manager", None)
+        self.workflows = existing if existing is not None else \
+            WorkflowManager(manager, worker_slots=worker_slots)
+
+    # ------------------------------------------------------------------ open
+
+    @classmethod
+    def open(
+        cls,
+        target: Union[str, os.PathLike, StorageBackend, ObjectStore,
+                      DatasetManager, None] = None,
+        *,
+        actor: str = "platform",
+        worker_slots: int = 8,
+        acl: Optional[AccessController] = None,
+        lineage: Optional[LineageGraph] = None,
+        **store_kwargs,
+    ) -> "Platform":
+        """Open (or create) a platform over ``target``.
+
+        - ``None``            → ephemeral in-memory store
+        - path / str          → :class:`FileBackend` repository directory
+        - ``StorageBackend``  → wrapped in an :class:`ObjectStore`
+        - ``ObjectStore``     → used as-is
+        - ``DatasetManager``  → wrapped directly (compat path)
+        """
+        if isinstance(target, DatasetManager):
+            # The manager already owns its ACL/lineage/store — accepting
+            # overrides here would silently not apply them.
+            if acl is not None or lineage is not None or store_kwargs:
+                raise ValueError(
+                    "acl=/lineage=/store kwargs cannot be combined with an "
+                    "existing DatasetManager — configure the manager itself")
+            manager = target
+        else:
+            if target is None:
+                backend: StorageBackend = MemoryBackend()
+                store = ObjectStore(backend, **store_kwargs)
+            elif isinstance(target, (str, os.PathLike)):
+                store = ObjectStore(FileBackend(os.fspath(target)),
+                                    **store_kwargs)
+            elif isinstance(target, StorageBackend):
+                store = ObjectStore(target, **store_kwargs)
+            elif isinstance(target, ObjectStore):
+                if store_kwargs:
+                    raise ValueError(
+                        "store kwargs cannot be combined with an existing "
+                        "ObjectStore — configure the store itself")
+                store = target
+            else:
+                raise TypeError(
+                    f"cannot open a Platform over {type(target).__name__}")
+            manager = DatasetManager(store, acl=acl, lineage=lineage)
+        return cls(manager, actor=actor, worker_slots=worker_slots)
+
+    def _actor(self, actor: Optional[str]) -> str:
+        return actor if actor is not None else self.actor
+
+    # ------------------------------------------------------------------ datasets
+
+    def dataset(self, name: str) -> "DatasetHandle":
+        """Typed handle on one dataset (existing or to-be-created)."""
+        return DatasetHandle(self, name)
+
+    def datasets(
+        self,
+        name_glob: str = "*",
+        tags: Sequence[str] = (),
+        attrs: Optional[Mapping[str, object]] = None,
+    ) -> List["DatasetHandle"]:
+        """Query datasets by name pattern / tags / info attrs — handles."""
+        return [DatasetHandle(self, n)
+                for n in self.manager.query_datasets(name_glob, tags=tags,
+                                                     attrs=attrs)]
+
+    def list_datasets(self) -> List[str]:
+        return self.manager.list_datasets()
+
+    # ------------------------------------------------------------------ governance
+
+    def grant(self, subject: str, pattern: str, action) -> None:
+        self.acl.grant(subject, pattern, action)
+
+    def revoke(self, record_id: str, reason: str = "",
+               actor: Optional[str] = None) -> RevocationReport:
+        """GDPR-delete a record everywhere it propagated."""
+        return self.revocation.revoke(record_id, actor=self._actor(actor),
+                                      reason=reason)
+
+    def audit_log(self) -> List[dict]:
+        return self.acl.audit_log()
+
+    def gc(self) -> int:
+        return self.manager.gc()
+
+    # ------------------------------------------------------------------ workflows
+
+    def register(self, workflow: Workflow) -> None:
+        self.workflows.register(workflow)
+
+    def run(self, workflow_name: str, trigger: str = "manual") -> WorkflowRun:
+        return self.workflows.run(workflow_name, trigger=trigger)
+
+    def resume(self, run_id: str) -> WorkflowRun:
+        return self.workflows.resume(run_id)
+
+    # ------------------------------------------------------------------ lineage
+
+    def ancestors(self, node_id: str) -> List[str]:
+        return self.lineage.ancestors(node_id)
+
+    def descendants(self, node_id: str) -> List[str]:
+        return self.lineage.descendants(node_id)
+
+    def __repr__(self) -> str:
+        return (f"Platform(backend={type(self.store.backend).__name__}, "
+                f"datasets={len(self.list_datasets())}, actor={self.actor!r})")
+
+
+class DatasetHandle:
+    """All operations on one named dataset, through the platform."""
+
+    def __init__(self, platform: Platform, name: str) -> None:
+        self._plat = platform
+        self.name = name
+
+    @property
+    def _dm(self) -> DatasetManager:
+        return self._plat.manager
+
+    def _actor(self, actor: Optional[str]) -> str:
+        return self._plat._actor(actor)
+
+    def exists(self) -> bool:
+        return self._dm.dataset_info(self.name) is not None
+
+    def info(self) -> Optional[dict]:
+        return self._dm.dataset_info(self.name)
+
+    # -- write side ----------------------------------------------------------
+
+    def check_in(
+        self,
+        records: Iterable[Record],
+        message: str = "",
+        actor: Optional[str] = None,
+        **kwargs,
+    ) -> Commit:
+        return self._dm.check_in(self.name, records, self._actor(actor),
+                                 message=message, **kwargs)
+
+    def delete_records(self, record_ids: Sequence[str],
+                       actor: Optional[str] = None,
+                       message: str = "delete records") -> Commit:
+        return self._dm.delete_records(self.name, record_ids,
+                                       self._actor(actor), message=message)
+
+    def tag(self, tag: str, actor: Optional[str] = None) -> None:
+        """Tag the *dataset* (discovery tag, not a version tag)."""
+        self._dm.tag_dataset(self.name, tag, self._actor(actor))
+
+    def tag_version(self, rev: str, tag: str,
+                    actor: Optional[str] = None) -> None:
+        self._dm.tag_version(self.name, rev, tag, self._actor(actor))
+
+    # -- read side -------------------------------------------------------------
+
+    def plan(
+        self,
+        rev: str = "main",
+        where=None,
+        attrs_equal: Optional[Mapping[str, object]] = None,
+        limit: Optional[int] = None,
+        shard: Optional[Tuple[int, int]] = None,
+        actor: Optional[str] = None,
+    ) -> CheckoutPlan:
+        """Lazy checkout plan — streamable, shardable, fingerprinted."""
+        return self._dm.plan_checkout(self.name, self._actor(actor), rev=rev,
+                                      where=where, attrs_equal=attrs_equal,
+                                      limit=limit, shard=shard)
+
+    def checkout(
+        self,
+        rev: str = "main",
+        where=None,
+        attrs_equal: Optional[Mapping[str, object]] = None,
+        limit: Optional[int] = None,
+        actor: Optional[str] = None,
+        register_snapshot: bool = True,
+    ) -> Snapshot:
+        """Materialized, lineage-registered checkout (cached by query)."""
+        plan = self.plan(rev=rev, where=where, attrs_equal=attrs_equal,
+                         limit=limit, actor=actor)
+        return plan.snapshot(register=register_snapshot)
+
+    def read(self, record_id: str, rev: str = "main",
+             actor: Optional[str] = None) -> bytes:
+        return self._dm.read_record(self.name, record_id,
+                                    self._actor(actor), rev=rev)
+
+    # -- versions ---------------------------------------------------------------
+
+    def version(self, rev: str = "main") -> "VersionHandle":
+        commit_id = self.versions.resolve(self.name, rev)
+        return VersionHandle(self._plat, self.name, commit_id)
+
+    @property
+    def versions(self):
+        return self._dm.versions
+
+    def log(self, rev: str = "main", limit: int = 100) -> List[Commit]:
+        return self.versions.log(self.versions.resolve(self.name, rev),
+                                 limit=limit)
+
+    def branches(self) -> List[str]:
+        return self.versions.list_branches(self.name)
+
+    def tags(self) -> List[str]:
+        return self.versions.list_tags(self.name)
+
+    def diff(self, rev_a: str, rev_b: str,
+             actor: Optional[str] = None) -> VersionDiff:
+        return self._dm.diff(self.name, rev_a, rev_b, self._actor(actor))
+
+    def __repr__(self) -> str:
+        return f"DatasetHandle({self.name!r})"
+
+
+class VersionHandle:
+    """One immutable dataset version, addressable and inspectable."""
+
+    def __init__(self, platform: Platform, dataset: str,
+                 commit_id: str) -> None:
+        self._plat = platform
+        self.dataset = dataset
+        self.commit_id = commit_id
+
+    @property
+    def commit(self) -> Commit:
+        return self._plat.versions.get_commit(self.commit_id)
+
+    @property
+    def node_id(self) -> str:
+        """This version's lineage node id."""
+        return version_node_id(self.dataset, self.commit_id)
+
+    def manifest(self) -> Manifest:
+        return self._plat.versions.get_manifest(self.commit.tree)
+
+    def entries(self) -> List[RecordEntry]:
+        return self.manifest().entries()
+
+    def record_ids(self) -> List[str]:
+        return self.manifest().record_ids()
+
+    def __len__(self) -> int:
+        return len(self.manifest())
+
+    def checkout(self, where=None, limit: Optional[int] = None,
+                 actor: Optional[str] = None, **kwargs) -> Snapshot:
+        """Checkout pinned to exactly this commit."""
+        return self._plat.dataset(self.dataset).checkout(
+            rev=self.commit_id, where=where, limit=limit, actor=actor,
+            **kwargs)
+
+    def plan(self, where=None, limit: Optional[int] = None,
+             shard: Optional[Tuple[int, int]] = None,
+             actor: Optional[str] = None) -> CheckoutPlan:
+        return self._plat.dataset(self.dataset).plan(
+            rev=self.commit_id, where=where, limit=limit, shard=shard,
+            actor=actor)
+
+    def tag(self, tag: str, actor: Optional[str] = None) -> None:
+        self._plat.dataset(self.dataset).tag_version(self.commit_id, tag,
+                                                     actor=actor)
+
+    def diff(self, other: Union[str, "VersionHandle"],
+             actor: Optional[str] = None) -> VersionDiff:
+        other_rev = other.commit_id if isinstance(other, VersionHandle) \
+            else other
+        return self._plat.dataset(self.dataset).diff(
+            self.commit_id, other_rev, actor=actor)
+
+    def parents(self) -> List["VersionHandle"]:
+        return [VersionHandle(self._plat, self.dataset, p)
+                for p in self.commit.parents]
+
+    def ancestors(self) -> List[str]:
+        """Lineage ancestry of this version (full provenance)."""
+        return self._plat.lineage.ancestors(self.node_id)
+
+    def __repr__(self) -> str:
+        return f"VersionHandle({self.dataset}@{self.commit_id[:12]})"

@@ -1,0 +1,51 @@
+"""Import indirection so the suite collects without ``hypothesis``.
+
+Test modules do ``from _hypothesis_shim import given, settings, st``.  When
+hypothesis is installed the real objects pass through; otherwise the
+property tests skip cleanly (instead of failing the whole module at
+import) and every plain test in the same file still runs.
+"""
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on clean machines
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Chainable stand-in: st.text(...).filter(...) etc. all no-op."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_a, **_k):
+            return self
+
+    class _StrategiesModule:
+        def __getattr__(self, _name):
+            return _Strategy()
+
+    st = _StrategiesModule()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg wrapper: the strategy-fed parameters must not be
+            # mistaken for pytest fixtures during collection.
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = getattr(fn, "__name__", "hypothesis_test")
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels.flash_attention import attention_reference, flash_attention
 from repro.kernels.rglru import rglru, rglru_reference, rglru_step

@@ -13,8 +13,9 @@ from repro.train.sharding import ActivationSharding, ShardingRules
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _auto_kwargs
+
+    return jax.make_mesh((1, 1), ("data", "model"), **_auto_kwargs(2))
 
 
 def test_shardmap_moe_matches_gspmd_path():

@@ -1,0 +1,279 @@
+"""Platform facade tests: open() polymorphism, handles, plans feeding the
+loader surface, workflow query parity, revocation, and the record index."""
+
+import pytest
+
+from repro import Platform
+from repro.core import (DatasetManager, MemoryBackend, ObjectStore,
+                        PermissionError_, Pipeline, Record, Workflow, attr,
+                        component)
+from repro.platform import DatasetHandle, VersionHandle
+
+
+def recs(n, prefix="r", **attrs):
+    return [Record(f"{prefix}{i}", f"payload-{prefix}{i}".encode(),
+                   {"i": i, **attrs}) for i in range(n)]
+
+
+@pytest.fixture
+def plat():
+    p = Platform.open(actor="alice")
+    p.dataset("ds").check_in(recs(8), message="init")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# open() polymorphism
+# ---------------------------------------------------------------------------
+
+
+def test_open_memory_default():
+    p = Platform.open()
+    assert isinstance(p.store.backend, MemoryBackend)
+
+
+def test_open_path_creates_file_repo(tmp_path):
+    p = Platform.open(str(tmp_path / "repo"), actor="a")
+    p.dataset("ds").check_in(recs(2))
+    # a second session over the same directory sees the data
+    p2 = Platform.open(str(tmp_path / "repo"), actor="a")
+    assert p2.dataset("ds").checkout().record_ids() == ["r0", "r1"]
+
+
+def test_reopened_platform_shares_workflow_manager():
+    """A second facade over the same engine must not stack a second commit
+    listener (commit triggers would fire once per facade)."""
+    p1 = Platform.open(actor="a")
+    p2 = Platform.open(p1.manager, actor="b")
+    assert p2.workflows is p1.workflows
+
+    @component(kind="map", name="ident")
+    def ident(rec):
+        return rec
+
+    p1.register(Workflow(name="t", pipeline=Pipeline([ident]),
+                         input_dataset="watched", output_dataset="out",
+                         trigger_on_commit_to="watched"))
+    p1.dataset("watched").check_in(recs(2))
+    assert len(p1.workflows.runs("t")) == 1
+    assert len(p1.dataset("out").versions.list_commits("out")) == 1
+
+
+def test_open_backend_store_and_manager():
+    backend = MemoryBackend()
+    p1 = Platform.open(backend)
+    assert p1.store.backend is backend
+    store = ObjectStore(MemoryBackend())
+    p2 = Platform.open(store)
+    assert p2.store is store
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    p3 = Platform.open(dm)
+    assert p3.manager is dm
+
+    with pytest.raises(TypeError):
+        Platform.open(42)
+
+
+# ---------------------------------------------------------------------------
+# handles
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_handle_roundtrip(plat):
+    ds = plat.dataset("ds")
+    assert ds.exists()
+    snap = ds.checkout()
+    assert len(snap) == 8
+    assert ds.read("r3") == b"payload-r3"
+    assert not plat.dataset("nope").exists()
+
+
+def test_default_actor_flows_and_acl_enforced(plat):
+    plat.grant("alice", "ds", "ADMIN")
+    assert plat.dataset("ds").checkout(actor="alice")
+    with pytest.raises(PermissionError_):
+        plat.dataset("ds").checkout(actor="mallory")
+    # handle default actor is the platform actor (alice) -> allowed
+    assert len(plat.dataset("ds").checkout()) == 8
+
+
+def test_version_handle(plat):
+    ds = plat.dataset("ds")
+    c2 = ds.check_in(recs(2, prefix="s"), message="more")
+    v = ds.version("main")
+    assert isinstance(v, VersionHandle)
+    assert v.commit_id == c2.commit_id
+    assert len(v) == 10
+    v.tag("golden")
+    assert ds.version("golden").commit_id == c2.commit_id
+    first = v.parents()[0]
+    assert len(first) == 8
+    d = first.diff(v)
+    assert sorted(d.added) == ["s0", "s1"]
+    # pinned checkout sees the old state even after new commits
+    assert len(first.checkout()) == 8
+    assert v.node_id in plat.descendants(first.node_id) or \
+        first.node_id in v.ancestors()
+
+
+def test_datasets_query_returns_handles(plat):
+    plat.dataset("ds").tag("text")
+    found = plat.datasets(tags=["text"])
+    assert [h.name for h in found] == ["ds"]
+    assert isinstance(found[0], DatasetHandle)
+
+
+# ---------------------------------------------------------------------------
+# plans: laziness, sharding, loader surface
+# ---------------------------------------------------------------------------
+
+
+def test_plan_streams_and_limits(plat):
+    plan = plat.dataset("ds").plan(where=attr("i") < 6, limit=3)
+    ids = [e.record_id for e in plan.iter_entries()]
+    assert ids == ["r0", "r1", "r2"]
+    assert plan.record_ids() == ids
+    assert plan.read("r1") == b"payload-r1"
+    assert plan.attrs("r2")["i"] == 2
+
+
+def test_plan_shards_partition(plat):
+    parts = [plat.dataset("ds").plan(shard=(i, 3)).record_ids()
+             for i in range(3)]
+    flat = sorted(x for p in parts for x in p)
+    assert flat == [f"r{i}" for i in range(8)]
+    assert all(len(set(p)) == len(p) for p in parts)
+    with pytest.raises(ValueError):
+        plat.dataset("ds").plan(shard=(3, 3))
+
+
+def test_plan_digest_ignores_commit_but_cache_does_not(plat):
+    p1 = plat.dataset("ds").plan(where=attr("i") >= 0)
+    plat.dataset("ds").check_in(recs(1, prefix="z"))
+    p2 = plat.dataset("ds").plan(where=attr("i") >= 0)
+    assert p1.query_digest() == p2.query_digest()
+    assert p1.commit_id != p2.commit_id
+    assert p1.snapshot().snapshot_id != p2.snapshot().snapshot_id
+
+
+def test_plan_content_digest_matches_snapshot(plat):
+    plan = plat.dataset("ds").plan(where=attr("i") < 4)
+    snap = plat.dataset("ds").checkout(where=attr("i") < 4)
+    assert plan.content_digest() == snap.content_digest()
+
+
+def test_plan_feeds_loader_duck_type(plat):
+    # the loader read surface, without importing jax here
+    plan = plat.dataset("ds").plan()
+    assert hasattr(plan, "record_ids") and hasattr(plan, "read")
+    assert hasattr(plan, "content_digest")
+    assert len({plan.read(r) for r in plan.record_ids()}) == 8
+
+
+# ---------------------------------------------------------------------------
+# workflows through the facade, with declarative input queries
+# ---------------------------------------------------------------------------
+
+
+def test_workflow_input_where_parity(plat):
+    @component(kind="map", name="ident")
+    def ident(rec):
+        return rec
+
+    plat.register(Workflow(name="evens", pipeline=Pipeline([ident]),
+                           input_dataset="ds", output_dataset="evens-out",
+                           input_where="i<4", n_shards=2))
+    run = plat.run("evens")
+    assert run.state == "SUCCEEDED", run.error
+    out = plat.dataset("evens-out").checkout()
+    assert sorted(out.record_ids()) == ["r0", "r1", "r2", "r3"]
+    # the run's input query fingerprint matches the CLI-parsed equivalent
+    from repro.core import parse_where
+    node = plat.lineage.node(f"workflow_run:{run.run_id}")
+    plan = plat.dataset("ds").plan(where=parse_where("i<4"))
+    assert node.meta["input_query"] == plan.query_digest()
+
+
+# ---------------------------------------------------------------------------
+# revocation + record index through the facade
+# ---------------------------------------------------------------------------
+
+
+def test_revoke_through_facade(plat):
+    report = plat.revoke("r2", reason="gdpr")
+    assert report.record_id == "r2"
+    assert "r2" not in plat.dataset("ds").checkout().record_ids()
+
+
+def test_record_index_tracks_carryover_and_removal(plat):
+    ds = plat.dataset("ds")
+    c1 = ds.version().commit_id
+    c2 = ds.check_in(recs(1, prefix="n")).commit_id      # r0 carried over
+    dm = plat.manager
+    got = dm.versions_with_record("r0")
+    assert ("ds", c1) in got and ("ds", c2) in got
+    c3 = ds.delete_records(["r0"]).commit_id
+    got = dm.versions_with_record("r0")
+    assert ("ds", c3) not in got
+    assert ("ds", c1) in got and ("ds", c2) in got
+    # new record indexed only from its introducing commit
+    assert dm.versions_with_record("n0") == [("ds", c2), ("ds", c3)]
+
+
+def test_record_index_grows_by_delta_not_by_manifest(plat):
+    dm = plat.manager
+    idx = dm.store.get_meta("recindex/ds")
+    size_before = len(str(idx))
+    # commit 5 more times with a single new record each; the index must not
+    # re-append every existing record per commit
+    for k in range(5):
+        plat.dataset("ds").check_in(recs(1, prefix=f"extra{k}-"))
+    idx = dm.store.get_meta("recindex/ds")
+    for rid, cids in idx["added"].items():
+        assert len(cids) == len(set(cids))          # deduped
+        assert len(cids) == 1                        # one add event each
+    assert len(str(idx)) < size_before + 5 * 120     # O(delta) growth
+
+
+def test_record_index_reopen_legacy_compat():
+    # a legacy flat index (rid -> [cids]) still answers containment
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    c = dm.check_in("old", recs(2), actor="a")
+    dm.store.put_meta("recindex/old", {"r0": [c.commit_id, c.commit_id]})
+    assert dm.versions_with_record("r0") == [("old", c.commit_id)]
+
+
+def test_legacy_migration_respects_pre_migration_deletion():
+    """A record deleted before the index migrated must not leak into
+    post-migration containment via the forward walk."""
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    c1 = dm.check_in("ds", recs(2), actor="a")                # adds r0, r1
+    c2 = dm.delete_records("ds", ["r0"], actor="a")           # removes r0
+    # simulate the pre-delta on-disk format: exact containment, no events
+    dm.store.put_meta("recindex/ds", {"r0": [c1.commit_id],
+                                      "r1": [c1.commit_id, c2.commit_id]})
+    # any new commit triggers migration
+    c3 = dm.check_in("ds", recs(1, prefix="n"), actor="a")
+    got_r0 = dm.versions_with_record("r0")
+    assert got_r0 == [("ds", c1.commit_id)]   # NOT c2 (removal) or c3
+    got_r1 = dm.versions_with_record("r1")
+    assert set(got_r1) == {("ds", c1.commit_id), ("ds", c2.commit_id),
+                           ("ds", c3.commit_id)}  # carried onto new head
+
+
+def test_merge_that_drops_record_not_reported_as_containing():
+    """VersionStore.merge bypasses check_in; a merge resolving to delete a
+    record must not count as containing it."""
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    c1 = dm.check_in("ds", recs(2), actor="a")                 # r0, r1 @ main
+    # side branch deletes r0
+    c2 = dm.check_in("ds", [], actor="a", branch="side",
+                     base=c1.commit_id, remove_ids=["r0"])
+    # main modifies r1
+    c3 = dm.check_in("ds", [Record("r1", b"changed", {})], actor="a")
+    merged = dm.versions.merge("ds", c3.commit_id, c2.commit_id, "a")
+    dm.versions.set_branch("ds", "main", merged.commit_id)
+    got = dict.fromkeys(cid for _, cid in dm.versions_with_record("r0"))
+    assert c1.commit_id in got and c3.commit_id in got
+    assert merged.commit_id not in got      # merge dropped r0
+    assert c2.commit_id not in got

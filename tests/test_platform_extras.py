@@ -4,8 +4,7 @@ scheduler daemon, store stats, human-task idempotency."""
 import time
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (AccessController, DatasetManager, FileBackend,
                         MemoryBackend, ObjectStore, Pipeline, Record,

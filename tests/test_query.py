@@ -1,0 +1,312 @@
+"""Query algebra tests: composition, evaluation, JSON round-trip, stable
+fingerprints, CLI-string parsing, and snapshot-cache behavior on checkout."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import (DatasetManager, MemoryBackend, ObjectStore, Record,
+                        attr, parse_where, record_id_in, tag_in)
+from repro.core.query import (ALL, And, Cmp, Not, Opaque, Or, Query,
+                              QueryParseError, as_query)
+from repro.core.store import BlobRef
+from repro.core.versioning import RecordEntry
+
+
+def entry(rid="r0", **attrs):
+    return RecordEntry(rid, BlobRef("0" * 64, 1), attrs)
+
+
+# ---------------------------------------------------------------------------
+# evaluation + composition
+# ---------------------------------------------------------------------------
+
+
+def test_cmp_operators_evaluate():
+    e = entry(lang="en", score=0.75, n=3, tags=["gold", "clean"])
+    assert (attr("lang") == "en")(e)
+    assert not (attr("lang") == "fr")(e)
+    assert (attr("lang") != "fr")(e)
+    assert (attr("score") >= 0.5)(e)
+    assert (attr("score") <= 0.75)(e)
+    assert (attr("n") < 4)(e) and (attr("n") > 2)(e)
+    assert attr("lang").isin("en", "fr")(e)
+    assert not attr("lang").isin("de")(e)
+    assert attr("tags").contains("gold")(e)
+    assert attr("lang").glob("e*")(e)
+    assert attr("lang").exists()(e)
+    assert not attr("missing").exists()(e)
+    assert tag_in("gold", "silver")(e)
+    assert not tag_in("silver")(e)
+    assert record_id_in("r0", "r9")(e)
+
+
+def test_missing_attr_semantics():
+    e = entry(lang="en")
+    assert not (attr("split") == "test")(e)
+    assert (attr("split") != "test")(e)      # absent != value
+    assert not (attr("split") < 5)(e)        # ordering on absent is False
+    assert not attr("split").glob("*")(e) or True  # glob('None') no crash
+
+
+def test_type_mismatch_is_false_not_crash():
+    e = entry(n="not-a-number")
+    assert not (attr("n") < 5)(e)
+    assert not attr("n").contains(42)(e) or True
+
+
+def test_boolean_composition():
+    e = entry(lang="en", split="train")
+    q = (attr("lang") == "en") & ~(attr("split") == "test")
+    assert q(e)
+    assert not q(entry(lang="en", split="test"))
+    q2 = (attr("lang") == "de") | (attr("split") == "train")
+    assert q2(e)
+    assert not q2(entry(lang="fr", split="test"))
+
+
+def test_record_id_pseudo_field():
+    assert (attr("id") == "r7")(entry("r7"))
+    assert parse_where("id=r7")(entry("r7"))
+
+
+def test_all_matches_everything_and_is_identity():
+    e = entry()
+    assert ALL(e)
+    q = attr("x") == 1
+    assert (ALL & q) is q
+    assert (ALL | q) is ALL
+
+
+def test_double_negation_collapses():
+    q = attr("x") == 1
+    assert (~~q).to_json() == q.to_json()
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip + fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_json_roundtrip():
+    q = ((attr("lang") == "en") & ~(attr("split") == "test")) \
+        | (attr("score") >= 0.5) | tag_in("gold")
+    blob = json.dumps(q.to_json())          # proves JSON-serializable
+    rt = Query.from_json(json.loads(blob))
+    assert rt.fingerprint() == q.fingerprint()
+    e = entry(lang="en", split="train", score=0.1, tags=[])
+    assert rt(e) == q(e)
+
+
+def test_true_is_identity_for_fingerprints():
+    q = attr("a") == 1
+    assert (q & ALL).fingerprint() == q.fingerprint()
+    assert (ALL & q).fingerprint() == q.fingerprint()
+    assert (q | ALL).fingerprint() == ALL.fingerprint()
+    # ...also when the TRUE arrives via from_json (no operator shortcut)
+    wrapped = Query.from_json({"op": "and",
+                               "args": [q.to_json(), {"op": "true"}]})
+    assert wrapped.fingerprint() == q.fingerprint()
+    absorbed = Query.from_json({"op": "or",
+                                "args": [q.to_json(), {"op": "true"}]})
+    assert absorbed.fingerprint() == ALL.fingerprint()
+
+
+def test_membership_list_order_invariance():
+    assert parse_where("x in [b, a]").fingerprint() == \
+        attr("x").isin("a", "b").fingerprint()
+    assert tag_in("z", "a").fingerprint() == tag_in("a", "z").fingerprint()
+
+
+def test_fingerprint_order_invariance():
+    a = (attr("x") == 1) & (attr("y") == 2)
+    b = (attr("y") == 2) & (attr("x") == 1)
+    assert a.fingerprint() == b.fingerprint()
+    assert ((attr("x") == 1) | (attr("y") == 2)).fingerprint() == \
+        ((attr("y") == 2) | (attr("x") == 1)).fingerprint()
+    # and/or are NOT interchangeable
+    assert a.fingerprint() != ((attr("x") == 1) | (attr("y") == 2)).fingerprint()
+
+
+def test_fingerprint_stable_across_processes():
+    q = (attr("lang") == "en") & ~(attr("split") == "test")
+    code = textwrap.dedent("""
+        from repro.core import attr
+        q = (attr("lang") == "en") & ~(attr("split") == "test")
+        print(q.fingerprint())
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         cwd=__file__.rsplit("/tests/", 1)[0])
+    assert out.stdout.strip() == q.fingerprint()
+
+
+def test_glob_matches_elements_of_list_attrs():
+    # the documented CLI example: tags~=gold* against list-valued tags
+    q = parse_where("tags~=gold*")
+    assert q(entry(tags=["golden", "clean"]))
+    assert not q(entry(tags=["clean"]))
+    assert q(entry(tags="golden"))  # scalar still works
+
+
+def test_non_json_value_takes_opaque_path_not_crash():
+    q = attr("k") == b"raw-bytes"
+    assert not q.serializable
+    assert q(entry(k=b"raw-bytes"))
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    dm.check_in("d", [Record("r0", b"x", {"k": 1})], actor="a")
+    # previously raised TypeError from json.dumps in query_digest
+    snap = dm.checkout("d", actor="a", where=q)
+    assert len(snap) == 0
+    snap2 = dm.checkout("d", actor="a", attrs_equal={"k": b"bytes"})
+    assert len(snap2) == 0
+
+
+def test_opaque_callable_not_serializable():
+    q = as_query(lambda e: True)
+    assert isinstance(q, Opaque)
+    assert not q.serializable
+    assert q(entry())
+    with pytest.raises(TypeError):
+        q.to_json()
+    with pytest.raises(TypeError):
+        q.fingerprint()
+    composed = q & (attr("x") == 1)
+    assert not composed.serializable
+
+
+def test_as_query_accepts_all_forms():
+    assert as_query(None) is None
+    q = attr("x") == 1
+    assert as_query(q) is q
+    assert as_query(q.to_json()).fingerprint() == q.fingerprint()
+    assert as_query("x=1").fingerprint() == q.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# CLI string parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_simple_equality():
+    q = parse_where("lang=en")
+    assert isinstance(q, Cmp)
+    assert q(entry(lang="en")) and not q(entry(lang="fr"))
+
+
+def test_parse_matches_builder_fingerprint():
+    assert parse_where("lang=en & split!=test").fingerprint() == \
+        ((attr("lang") == "en") & (attr("split") != "test")).fingerprint()
+
+
+def test_parse_precedence_and_parens():
+    # & binds tighter than |
+    q = parse_where("a=1 | b=2 & c=3")
+    assert isinstance(q, Or)
+    assert q(entry(a=1)) and q(entry(b=2, c=3)) and not q(entry(b=2))
+    q2 = parse_where("(a=1 | b=2) & c=3")
+    assert not q2(entry(a=1)) and q2(entry(a=1, c=3))
+
+
+def test_parse_negation_comparisons_and_globs():
+    q = parse_where("~flagged & score>=0.5 & name~=doc-0*")
+    assert q(entry(score=0.9, name="doc-01"))
+    assert not q(entry(score=0.9, name="doc-01", flagged=True))
+    assert not q(entry(score=0.1, name="doc-01"))
+    assert not q(entry(score=0.9, name="img-01"))
+
+
+def test_parse_value_coercion():
+    assert parse_where("n=3")(entry(n=3))
+    assert parse_where("f=0.5")(entry(f=0.5))
+    assert parse_where("b=true")(entry(b=True))
+    assert parse_where("s='3'")(entry(s="3"))
+    assert not parse_where("s='3'")(entry(s=3))
+
+
+def test_parse_in_list():
+    q = parse_where("lang in [en, fr]")
+    assert q(entry(lang="en")) and q(entry(lang="fr"))
+    assert not q(entry(lang="de"))
+
+
+def test_parse_bare_field_is_exists():
+    q = parse_where("labeled")
+    assert q(entry(labeled=False))
+    assert not q(entry(other=1))
+
+
+def test_parse_errors():
+    for bad in ["lang=", "&", "(a=1", "a=1 b=2", "a ^ b"]:
+        with pytest.raises(QueryParseError):
+            parse_where(bad)
+    assert parse_where("") is ALL or parse_where("")(entry())
+
+
+# ---------------------------------------------------------------------------
+# checkout integration: snapshot cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def dm():
+    m = DatasetManager(ObjectStore(MemoryBackend()))
+    m.check_in("ds", [Record(f"r{i}", f"x{i}".encode(),
+                             {"lang": "en" if i % 2 else "fr", "i": i})
+                      for i in range(10)], actor="a")
+    return m
+
+
+def _snapshot_nodes(dm):
+    return [n for n in dm.lineage.nodes("snapshot")]
+
+
+def test_identical_checkouts_share_one_snapshot_node(dm):
+    s1 = dm.checkout("ds", actor="a", where=attr("lang") == "en")
+    s2 = dm.checkout("ds", actor="a", where=parse_where("lang=en"))
+    assert s1.snapshot_id == s2.snapshot_id
+    assert len(_snapshot_nodes(dm)) == 1
+    assert s1.record_ids() == s2.record_ids()
+
+
+def test_different_queries_get_distinct_snapshots(dm):
+    s1 = dm.checkout("ds", actor="a", where=attr("lang") == "en")
+    s2 = dm.checkout("ds", actor="a", where=attr("lang") == "fr")
+    assert s1.snapshot_id != s2.snapshot_id
+    assert len(_snapshot_nodes(dm)) == 2
+
+
+def test_new_commit_invalidates_cache(dm):
+    s1 = dm.checkout("ds", actor="a", where=attr("lang") == "en")
+    dm.check_in("ds", [Record("r99", b"new", {"lang": "en"})], actor="a")
+    s2 = dm.checkout("ds", actor="a", where=attr("lang") == "en")
+    assert s1.snapshot_id != s2.snapshot_id
+    assert "r99" in s2.record_ids()
+
+
+def test_opaque_predicate_never_cached(dm):
+    s1 = dm.checkout("ds", actor="a", where=lambda e: e.attrs["lang"] == "en")
+    s2 = dm.checkout("ds", actor="a", where=lambda e: e.attrs["lang"] == "en")
+    assert s1.snapshot_id != s2.snapshot_id
+    assert s1.record_ids() == s2.record_ids()
+
+
+def test_unregistered_checkout_adds_no_node(dm):
+    dm.checkout("ds", actor="a", where=attr("lang") == "en",
+                register_snapshot=False)
+    assert len(_snapshot_nodes(dm)) == 0
+
+
+def test_cache_survives_reopen():
+    backend = MemoryBackend()
+    dm1 = DatasetManager(ObjectStore(backend))
+    dm1.check_in("ds", [Record("r0", b"x", {"k": 1})], actor="a")
+    s1 = dm1.checkout("ds", actor="a", where=attr("k") == 1)
+    dm2 = DatasetManager(ObjectStore(backend))
+    s2 = dm2.checkout("ds", actor="a", where=attr("k") == 1)
+    assert s1.snapshot_id == s2.snapshot_id
+    assert len(_snapshot_nodes(dm2)) == 1

@@ -3,8 +3,7 @@
 import os
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.store import (DEFAULT_CHUNK_SIZE, FileBackend, IntegrityError,
                               MemoryBackend, NotFoundError, ObjectStore)

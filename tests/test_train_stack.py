@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import DatasetManager, MemoryBackend, ObjectStore, Record
 from repro.data import (ByteTokenizer, PackComponent, ShardedSnapshotLoader,
@@ -141,8 +140,8 @@ def test_elastic_restore_onto_mesh():
     dm = DatasetManager(ObjectStore(MemoryBackend()))
     params = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     save_checkpoint(dm, "ckpt/elastic", 1, params)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _auto_kwargs
+    mesh = jax.make_mesh((1,), ("data",), **_auto_kwargs(1))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     p2, _, _ = load_checkpoint(dm, "ckpt/elastic",
                                jax.eval_shape(lambda: params),

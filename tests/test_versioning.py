@@ -1,8 +1,7 @@
 """Versioning tests: commits, refs, diff, merge, history."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.store import MemoryBackend, ObjectStore
 from repro.core.versioning import (Manifest, MergeConflict, RecordEntry,
