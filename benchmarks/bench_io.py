@@ -1,0 +1,60 @@
+"""Machine-readable bench output — the ``BENCH_platform.json`` contract.
+
+Each bench writes its rows into one section of a shared JSON document so
+future PRs have a performance trajectory to compare against::
+
+    {
+      "schema": 1,
+      "sections": {
+        "platform": {"generated_unix": ..., "smoke": false,
+                     "rows": [{"name", "us_per_call", "derived"}, ...],
+                     "metrics": {"checkout_filtered_speedup": ...}},
+        "loader":   {...}
+      }
+    }
+
+Regenerate the committed repo-root file with the non-smoke sizes::
+
+    PYTHONPATH=src python benchmarks/platform_bench.py --json BENCH_platform.json
+    PYTHONPATH=src python benchmarks/loader_bench.py   --json BENCH_platform.json
+
+``scripts/ci.sh`` runs the smoke variants into a temp file and validates
+both it and the committed file via ``scripts/check_bench_json.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+SCHEMA = 1
+
+
+def write_section(path: str, section: str, rows, metrics=None,
+                  smoke: bool = False) -> dict:
+    """Merge one bench section into ``path``, preserving other sections."""
+    doc = {"schema": SCHEMA, "sections": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+            if isinstance(existing, dict) and existing.get("schema") == SCHEMA:
+                doc = existing
+        except (ValueError, OSError):
+            pass  # malformed file: rewrite from scratch
+    doc.setdefault("sections", {})[section] = {
+        "generated_unix": round(time.time(), 3),
+        "smoke": bool(smoke),
+        "rows": [{"name": name, "us_per_call": round(float(us), 2),
+                  "derived": derived}
+                 for name, us, derived in rows],
+        "metrics": {k: (round(v, 3) if isinstance(v, float) else v)
+                    for k, v in (metrics or {}).items()},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return doc

@@ -1,9 +1,15 @@
-"""Loader throughput: platform snapshot -> training batches (tokens/s)."""
+"""Loader throughput: platform snapshot -> training batches (tokens/s).
+
+``loader_steady_state`` is the regression contract for the epoch-order
+cache: batches/sec after warmup with the cached permutation vs the legacy
+per-batch recompute (``cache_epoch_orders=False``), same snapshot, same
+stream (golden tests prove bit-identity).
+"""
 
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -12,12 +18,45 @@ from repro.core.transforms import Pipeline, RunContext
 from repro.data import PackComponent, ShardedSnapshotLoader, TokenizeComponent
 from repro.platform import Platform
 
+try:  # package context (python -m benchmarks.run) vs direct script
+    from . import bench_io
+except ImportError:  # pragma: no cover
+    import bench_io
 
-def run() -> List[Tuple[str, float, str]]:
-    rows = []
+
+def _packed_docs(n: int, seq_len: int, seed: int = 0) -> List[Record]:
+    """Synthesize packed records directly (no tokenizer in the loop)."""
+    from repro.data.components import encode_packed
+
+    rng = np.random.default_rng(seed)
+    L = seq_len + 1
+    out = []
+    positions = np.arange(L, dtype=np.int32)
+    segments = np.zeros(L, np.int32)
+    for i in range(n):
+        tokens = rng.integers(3, 259, size=L).astype(np.int32)
+        out.append(Record(f"p{i:06d}",
+                          encode_packed(tokens, segments, positions),
+                          {"format": "packed.bin"}))
+    return out
+
+
+def _batches_per_sec(loader: ShardedSnapshotLoader, n: int = 16) -> float:
+    loader.next_batch()  # warmup (plan materialization, caches)
+    loader.next_batch()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        loader.next_batch()
+    return n / (time.perf_counter() - t0)
+
+
+def run(smoke: bool = False,
+        metrics: Optional[Dict[str, object]] = None) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
     plat = Platform.open(actor="b")
+    n_raw = 128 if smoke else 512
     docs = [Record(f"d{i:04d}", b"some training text " * 64, {})
-            for i in range(512)]
+            for i in range(n_raw)]
     plat.dataset("raw").check_in(docs)
     pipe = Pipeline([TokenizeComponent(), PackComponent(seq_len=512)])
     packed = pipe.run(list(plat.dataset("raw").plan()), RunContext())
@@ -48,4 +87,49 @@ def run() -> List[Tuple[str, float, str]]:
     dt = (time.perf_counter() - t0) / 8
     rows.append(("loader_prefetch_b8_s512", dt * 1e6,
                  f"{8 * 512 / dt / 1e6:.1f}Mtok/s"))
+    it.close()
+
+    # --- steady state: cached epoch order vs legacy per-batch recompute ------
+    n_steady, seq = (256, 128) if smoke else (8192, 128)
+    plat.dataset("steady").check_in(_packed_docs(n_steady, seq))
+    plan = plat.dataset("steady").plan()
+    legacy_bps = _batches_per_sec(
+        ShardedSnapshotLoader(plan, 8, seq, cache_epoch_orders=False))
+    fast_bps = _batches_per_sec(ShardedSnapshotLoader(plan, 8, seq))
+    speedup = fast_bps / legacy_bps
+    cache_hits = plat.store.stats.cache_hits
+    rows.append(("loader_steady_state_legacy", 1e6 / legacy_bps,
+                 f"{legacy_bps:.1f} batches/s, {n_steady} records"))
+    rows.append(("loader_steady_state", 1e6 / fast_bps,
+                 f"{fast_bps:.1f} batches/s, {speedup:.1f}x vs legacy, "
+                 f"cache_hits={cache_hits}"))
+    if metrics is not None:
+        metrics["loader_steady_state_speedup"] = speedup
+        metrics["loader_batches_per_sec"] = fast_bps
+        metrics["loader_records"] = n_steady
+        metrics["store_cache_hits"] = int(cache_hits)
     return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge rows into a BENCH_platform.json document")
+    args = ap.parse_args(argv)
+    metrics: Dict[str, object] = {}
+    rows = run(smoke=args.smoke, metrics=metrics)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"loader/{name},{us:.1f},{derived}")
+    if args.json:
+        bench_io.write_section(args.json, "loader", rows, metrics,
+                               smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,7 +9,7 @@ each row is "one paper feature, measured".
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -18,6 +18,11 @@ from repro.core import (DatasetManager, MemoryBackend, ObjectStore, Pipeline,
                         attr, component)
 from repro.data import PackComponent, TokenizeComponent
 from repro.platform import Platform
+
+try:  # package context (python -m benchmarks.run) vs direct script
+    from . import bench_io
+except ImportError:  # pragma: no cover
+    import bench_io
 
 
 def timeit(fn: Callable[[], object], repeat: int = 5) -> float:
@@ -35,7 +40,20 @@ def _docs(n, size=2048, seed=0):
     return [Record(f"d{i:05d}", rng.bytes(size), {"i": i}) for i in range(n)]
 
 
-def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
+def _attr_docs(n, size=64, seed=0):
+    """Records with realistic low/high-cardinality + numeric attrs."""
+    rng = np.random.default_rng(seed)
+    langs = ["en", "fr", "de", "ja"]
+    return [
+        Record(f"r{i:06d}", rng.bytes(size),
+               {"i": i, "lang": langs[i % 4], "golden": i % 200 == 0,
+                "score": float(rng.random())})
+        for i in range(n)
+    ]
+
+
+def run(smoke: bool = False,
+        metrics: Optional[Dict[str, object]] = None) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     N, SZ = (64, 512) if smoke else (256, 2048)
 
@@ -135,6 +153,48 @@ def run(smoke: bool = False) -> List[Tuple[str, float, str]]:
     us = timeit(lambda: handle.checkout(where=q), 5)
     rows.append(("facade_checkout_cached", us, "snapshot dedup hit"))
 
+    # --- hot path: index-pruned checkout vs full manifest scan ----------------
+    NF = 512 if smoke else 20_000
+    platf = Platform.open(actor="bench")
+    fd = platf.dataset("filtered")
+    fd.check_in(_attr_docs(NF))
+    sel = (attr("lang") == "en") & (attr("golden") == True)  # noqa: E712
+    scan_us = timeit(lambda: fd.plan(where=sel, use_index=False).entries(), 5)
+    idx_us = timeit(lambda: fd.plan(where=sel).entries(), 5)
+    pruned = fd.plan(where=sel)
+    n_hits = len(pruned.entries())
+    filtered_speedup = scan_us / idx_us
+    rows.append(("checkout_filtered_scan", scan_us, f"{NF} records scanned"))
+    rows.append(("checkout_filtered_indexed", idx_us,
+                 f"{n_hits} hits via {pruned.explain()['candidates']} "
+                 f"candidates, {filtered_speedup:.1f}x vs scan"))
+
+    # --- verified-once CAS read cache ----------------------------------------
+    NR, RSZ = (32, 4096) if smoke else (256, 65_536)
+    payload_docs = _docs(NR, RSZ, seed=5)
+    plat_hot = Platform.open(actor="bench")  # chunk cache on (default)
+    plat_hot.dataset("cas").check_in(payload_docs)
+    snap_hot = plat_hot.dataset("cas").checkout(register_snapshot=False)
+    plat_cold = Platform.open(actor="bench", cache_bytes=0)
+    plat_cold.dataset("cas").check_in(payload_docs)
+    snap_cold = plat_cold.dataset("cas").checkout(register_snapshot=False)
+    ids = snap_hot.record_ids()
+    nocache_us = timeit(lambda: snap_cold.read_batch(ids), 3)
+    hits_before = plat_hot.store.stats.cache_hits
+    cached_us = timeit(lambda: snap_hot.read_batch(ids), 3)
+    cache_hits = plat_hot.store.stats.cache_hits - hits_before
+    rows.append(("cas_read_all_nocache", nocache_us,
+                 f"{NR}x{RSZ}B, rehash every read"))
+    rows.append(("cas_read_all_cached", cached_us,
+                 f"cache_hits+={cache_hits}, "
+                 f"{nocache_us / cached_us:.1f}x vs nocache"))
+
+    if metrics is not None:
+        metrics["checkout_filtered_speedup"] = filtered_speedup
+        metrics["checkout_filtered_records"] = NF
+        metrics["cas_cached_read_speedup"] = nocache_us / cached_us
+        metrics["cas_cache_hits"] = int(cache_hits)
+
     return rows
 
 
@@ -144,10 +204,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge rows into a BENCH_platform.json document")
     args = ap.parse_args(argv)
+    metrics: Dict[str, object] = {}
+    rows = run(smoke=args.smoke, metrics=metrics)
     print("name,us_per_call,derived")
-    for name, us, derived in run(smoke=args.smoke):
+    for name, us, derived in rows:
         print(f"platform/{name},{us:.1f},{derived}")
+    if args.json:
+        bench_io.write_section(args.json, "platform", rows, metrics,
+                               smoke=args.smoke)
     return 0
 
 

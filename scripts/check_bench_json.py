@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Validate the ``BENCH_platform.json`` contract (run by scripts/ci.sh).
+
+Fails (exit 1) if any given file is missing, unparseable, has the wrong
+schema, or lacks the contract rows — so a PR cannot silently drop the
+bench trajectory the repo commits at its root.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = 1
+REQUIRED_ROWS = {
+    "platform": (
+        "checkout_filtered_scan",
+        "checkout_filtered_indexed",
+        "cas_read_all_nocache",
+        "cas_read_all_cached",
+    ),
+    "loader": (
+        "loader_steady_state_legacy",
+        "loader_steady_state",
+    ),
+}
+REQUIRED_METRICS = {
+    "platform": ("checkout_filtered_speedup", "cas_cache_hits"),
+    "loader": ("loader_steady_state_speedup",),
+}
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"schema != {SCHEMA}")
+    sections = doc.get("sections", {})
+    for section, names in REQUIRED_ROWS.items():
+        if section not in sections:
+            raise ValueError(f"missing section {section!r}")
+        body = sections[section]
+        rows = body.get("rows", [])
+        for row in rows:
+            if not isinstance(row.get("name"), str):
+                raise ValueError(f"malformed row in {section!r}: {row!r}")
+            if not isinstance(row.get("us_per_call"), (int, float)):
+                raise ValueError(f"non-numeric us_per_call: {row!r}")
+        have = {row["name"] for row in rows}
+        missing = set(names) - have
+        if missing:
+            raise ValueError(f"section {section!r} missing rows {sorted(missing)}")
+        mmissing = set(REQUIRED_METRICS[section]) - set(body.get("metrics", {}))
+        if mmissing:
+            raise ValueError(
+                f"section {section!r} missing metrics {sorted(mmissing)}")
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_bench_json.py FILE [FILE...]", file=sys.stderr)
+        return 2
+    status = 0
+    for path in argv:
+        try:
+            check(path)
+            print(f"OK {path}")
+        except Exception as exc:  # noqa: BLE001 — report every file
+            status = 1
+            print(f"FAIL {path}: {exc}", file=sys.stderr)
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -12,7 +12,18 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+SMOKE_JSON="$(mktemp --suffix=.json)"
+trap 'rm -f "$SMOKE_JSON"' EXIT
+
 echo "== platform bench (smoke) =="
-PYTHONPATH=src python benchmarks/platform_bench.py --smoke
+PYTHONPATH=src python benchmarks/platform_bench.py --smoke --json "$SMOKE_JSON"
+
+echo "== loader bench (smoke) =="
+PYTHONPATH=src python benchmarks/loader_bench.py --smoke --json "$SMOKE_JSON"
+
+echo "== bench contract =="
+# the smoke run just produced one document; the committed repo-root file
+# (non-smoke trajectory) must exist and satisfy the same contract
+python scripts/check_bench_json.py "$SMOKE_JSON" BENCH_platform.json
 
 echo "CI OK"

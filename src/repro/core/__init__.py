@@ -18,6 +18,7 @@ its engine, importable directly for embedding and tests:
 
 from .acl import AccessController, Action, PermissionError_
 from .dataset import CheckoutPlan, DatasetManager, Record, Snapshot
+from .index import AttributeIndex
 from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import (ALL, And, Cmp, Not, Or, Query, QueryParseError, attr,
                     parse_where, record_id_in, tag_in)
@@ -40,6 +41,7 @@ __all__ = [
     "parse_where", "record_id_in", "tag_in",
     "EdgeKind", "LineageGraph", "NodeKind",
     "RevocationEngine", "RevocationReport", "RevokedError",
+    "AttributeIndex",
     "BlobRef", "FileBackend", "IntegrityError", "MemoryBackend",
     "NotFoundError", "ObjectStore", "StorageBackend",
     "BatchComponent", "Component", "FilterComponent", "FlatMapComponent",

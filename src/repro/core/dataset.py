@@ -22,7 +22,7 @@ from typing import (Callable, Dict, Iterable, Iterator, List, Mapping,
 
 from .acl import AccessController, Action
 from .lineage import EdgeKind, LineageGraph, NodeKind
-from .query import ALL, Cmp, Query, as_query
+from .query import ALL, Cmp, Query, TrueQuery, as_query
 from .store import BlobRef, MemoryBackend, NotFoundError, ObjectStore
 from .versioning import (Commit, Manifest, RecordEntry, VersionDiff,
                          VersionStore, diff_manifests)
@@ -83,6 +83,11 @@ class Snapshot:
     def read(self, record_id: str) -> bytes:
         return self._store.get_blob(self._by_id[record_id].blob)
 
+    def read_batch(self, record_ids: Sequence[str]) -> List[bytes]:
+        """Batched payload fetch (grouped CAS lookups, chunk dedup)."""
+        return self._store.get_blobs(
+            [self._by_id[r].blob for r in record_ids])
+
     def __iter__(self):
         for e in self._entries:
             yield Record(e.record_id, self._store.get_blob(e.blob), dict(e.attrs))
@@ -122,6 +127,7 @@ class CheckoutPlan:
         query: Optional[Query] = None,
         limit: Optional[int] = None,
         shard: Optional[Tuple[int, int]] = None,
+        use_index: bool = True,
     ) -> None:
         if shard is not None:
             idx, n = shard
@@ -134,8 +140,12 @@ class CheckoutPlan:
         self.query = query if query is not None else ALL
         self.limit = limit
         self.shard = tuple(shard) if shard is not None else None
+        # Execution hint only — indexed and scan paths return identical
+        # entries, so use_index is deliberately NOT part of the plan digest.
+        self.use_index = use_index
         self._entries: Optional[List[RecordEntry]] = None
         self._by_id: Optional[Dict[str, RecordEntry]] = None
+        self._explain: Optional[Dict[str, object]] = None
 
     # -- identity ------------------------------------------------------------
 
@@ -166,16 +176,47 @@ class CheckoutPlan:
     # -- streaming iteration ---------------------------------------------------
 
     def iter_entries(self) -> Iterator[RecordEntry]:
-        """Stream matching entries without materializing the manifest list."""
+        """Stream matching entries without materializing the manifest list.
+
+        When the commit carries an attribute index and the query algebra can
+        be resolved against it, only candidate positions are deserialized
+        into :class:`RecordEntry` objects (and re-evaluated only when the
+        index answer is a superset); otherwise this is the original full
+        manifest scan.  Both paths emit identical entry streams — shard and
+        limit count *matches*, which the index path reproduces exactly.
+        """
         if self._entries is not None:
             yield from self._entries
             return
-        manifest = self._dm.versions.get_manifest(
-            self._dm.versions.get_commit(self.commit_id).tree)
+        versions = self._dm.versions
+        tree = versions.get_commit(self.commit_id).tree
+        plan = None
+        if (self.use_index and self.query.serializable
+                and not isinstance(self.query, TrueQuery)):
+            index = versions.get_attr_index(tree)
+            if index is not None:
+                plan = self.query.index_plan(index)
+        if plan is not None:
+            positions, exact = plan
+            records = versions.get_raw_records(tree)
+            self._explain = {"mode": "indexed", "n_records": len(records),
+                             "candidates": len(positions), "exact": exact}
+            candidates = (
+                RecordEntry.from_raw(records[pos])
+                for pos in sorted(positions))
+            yield from self._filtered(candidates, evaluate=not exact)
+        else:
+            manifest = versions.get_manifest(tree)
+            self._explain = {"mode": "scan", "n_records": len(manifest)}
+            yield from self._filtered(manifest.iter_entries(), evaluate=True)
+
+    def _filtered(self, entries: Iterable[RecordEntry],
+                  evaluate: bool) -> Iterator[RecordEntry]:
+        """Shared match/shard/limit tail of both checkout paths."""
         matched = 0
         emitted = 0
-        for entry in manifest.iter_entries():
-            if not self.query(entry):
+        for entry in entries:
+            if evaluate and not self.query(entry):
                 continue
             keep = self.shard is None or matched % self.shard[1] == self.shard[0]
             matched += 1
@@ -185,6 +226,14 @@ class CheckoutPlan:
             emitted += 1
             if self.limit is not None and emitted >= self.limit:
                 return
+
+    def explain(self) -> Dict[str, object]:
+        """How the last (or a forced) iteration executed: ``mode`` is
+        ``"indexed"`` (with ``candidates``/``exact``) or ``"scan"``."""
+        if self._explain is None:
+            self.entries()
+        assert self._explain is not None
+        return dict(self._explain)
 
     def entries(self) -> List[RecordEntry]:
         if self._entries is None:
@@ -215,6 +264,11 @@ class CheckoutPlan:
 
     def read(self, record_id: str) -> bytes:
         return self._dm.store.get_blob(self._entry(record_id).blob)
+
+    def read_batch(self, record_ids: Sequence[str]) -> List[bytes]:
+        """Batched payload fetch (grouped CAS lookups, chunk dedup)."""
+        return self._dm.store.get_blobs(
+            [self._entry(r).blob for r in record_ids])
 
     def content_digest(self) -> str:
         h = hashlib.sha256()
@@ -258,6 +312,11 @@ class DatasetManager:
         # Commit listeners: the workflow manager subscribes here to implement
         # "Trigger a workflow by event (new dataset version ...)".
         self._commit_listeners: List[Callable[[str, Commit], None]] = []
+        # Per-dataset commit-DAG adjacency memo, keyed by the dataset's
+        # commit-id list so any writer (including merges that bypass
+        # check_in) invalidates it for the cost of one metadata read.
+        self._children_cache: Dict[
+            str, Tuple[Tuple[str, ...], Tuple[Dict[str, List[str]], set]]] = {}
 
     def on_commit(self, fn: Callable[[str, Commit], None]) -> None:
         self._commit_listeners.append(fn)
@@ -453,6 +512,7 @@ class DatasetManager:
         attrs_equal: Optional[Mapping[str, object]] = None,
         limit: Optional[int] = None,
         shard: Optional[Tuple[int, int]] = None,
+        use_index: bool = True,
     ) -> CheckoutPlan:
         """Build a lazy :class:`CheckoutPlan` for a queried dataset version.
 
@@ -470,7 +530,7 @@ class DatasetManager:
             for c in eq:
                 query = c if query is None else query & c
         return CheckoutPlan(self, dataset, commit_id, rev, query=query,
-                            limit=limit, shard=shard)
+                            limit=limit, shard=shard, use_index=use_index)
 
     def checkout(
         self,
@@ -549,10 +609,20 @@ class DatasetManager:
     def _commit_children(
         self, dataset: str
     ) -> Tuple[Dict[str, List[str]], set]:
-        """Forward adjacency of the commit DAG + the set of merge commits."""
+        """Forward adjacency of the commit DAG + the set of merge commits.
+
+        Memoized per dataset: rebuilding the adjacency costs one commit-blob
+        read per commit, while validating the memo costs one metadata read
+        (the commit-id list), so repeated revocation/containment walks stop
+        re-reading the whole DAG.  Callers must not mutate the result.
+        """
+        cids = tuple(self.versions.list_commits(dataset))
+        cached = self._children_cache.get(dataset)
+        if cached is not None and cached[0] == cids:
+            return cached[1]
         children: Dict[str, List[str]] = {}
         merges: set = set()
-        for cid in self.versions.list_commits(dataset):
+        for cid in cids:
             try:
                 c = self.versions.get_commit(cid)
             except NotFoundError:
@@ -561,6 +631,7 @@ class DatasetManager:
                 merges.add(cid)
             for p in c.parents:
                 children.setdefault(p, []).append(cid)
+        self._children_cache[dataset] = (cids, (children, merges))
         return children, merges
 
     def _manifest_contains(self, commit_id: str, record_id: str) -> bool:

@@ -1,0 +1,206 @@
+"""Per-commit attribute index: posting lists + numeric zone maps.
+
+Written at check-in next to the manifest (content-addressed, pointed at by
+``meta attridx/<tree>``), consumed by
+:meth:`~repro.core.dataset.CheckoutPlan.iter_entries` via the
+``Query.index_plan`` visitor so selective checkouts only deserialize and
+evaluate candidate manifest entries instead of scanning every record.
+
+Design
+------
+- **Positions, not ids.** All structures map to integer positions in the
+  manifest's record-id-sorted order — the exact order ``iter_entries``
+  streams — so a resolved plan is just "construct these entries".
+- **Posting lists** for scalar attributes with at most ``max_cardinality``
+  distinct values: canonical value key -> sorted positions.  Numerics
+  (``bool``/``int``/``float``) share one canonical class per numeric value
+  because Python equality does (``1 == 1.0 == True``); strings and ``None``
+  get their own classes.  Posting lists are *complete* for a kept field
+  (every present occurrence is listed), which is what makes complements
+  (``!=``, ``~``) and absence reasoning exact.
+- **Zone maps** for numeric attributes of any cardinality: per block of
+  ``zone_block`` consecutive positions, the [min, max] of the numeric
+  values present (``None`` for blocks with no numeric value).  Range
+  predicates prune to candidate blocks; candidates are re-evaluated, so
+  zone answers only need to be supersets.
+- Fields never seen in any record are recorded implicitly: the planner
+  treats them as "absent everywhere", which is itself exact.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+__all__ = ["AttributeIndex"]
+
+# Attr names shadowed by the query pseudo-field ``id`` — indexing them would
+# invite resolving Cmp("id", ...) against the wrong values.
+_RESERVED_FIELDS = ("id", "record_id")
+
+
+def canon_key(value) -> Optional[str]:
+    """Canonical posting key for a scalar value; ``None`` if unindexable.
+
+    Numerics collapse to one class per numeric value (``1``/``1.0``/``True``
+    all compare equal in Python, so they must share a posting list for
+    lookups to stay a correct superset).
+    """
+    if value is None:
+        return "z"
+    if isinstance(value, bool):
+        value = int(value)
+    if isinstance(value, int):
+        return "n:%d" % value
+    if isinstance(value, float):
+        if value.is_integer() and abs(value) < 2 ** 53:
+            return "n:%d" % int(value)
+        return "n:%r" % value
+    if isinstance(value, str):
+        return "s:" + value
+    return None
+
+
+def decode_key(key: str):
+    """Representative value of a posting class (for predicate evaluation)."""
+    if key == "z":
+        return None
+    if key.startswith("s:"):
+        return key[2:]
+    num = key[2:]
+    try:
+        return int(num)
+    except ValueError:
+        return float(num)
+
+
+class AttributeIndex:
+    """Queryable per-commit index over one manifest's attributes."""
+
+    VERSION = 1
+    MAX_CARDINALITY = 64
+    ZONE_BLOCK = 256
+
+    def __init__(
+        self,
+        n_records: int,
+        fields: Dict[str, dict],
+        postings: Dict[str, Dict[str, List[int]]],
+        zones: Dict[str, List[Optional[List[float]]]],
+        zone_block: int = ZONE_BLOCK,
+    ) -> None:
+        self.n = n_records
+        self.fields = fields
+        self.postings = postings
+        self.zones = zones
+        self.block = zone_block
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, entries, max_cardinality: int = MAX_CARDINALITY,
+              zone_block: int = ZONE_BLOCK) -> "AttributeIndex":
+        """Index ``entries`` (already in record-id-sorted manifest order)."""
+        n = len(entries)
+        fields: Dict[str, dict] = {}
+        postings: Dict[str, Dict[str, List[int]]] = {}
+        numerics: Dict[str, List] = {}
+        for pos, entry in enumerate(entries):
+            for f, v in (entry.attrs or {}).items():
+                if f in _RESERVED_FIELDS:
+                    continue
+                info = fields.setdefault(
+                    f, {"present": 0, "postings": True, "zones": False})
+                info["present"] += 1
+                if info["postings"]:
+                    key = canon_key(v)
+                    pmap = postings.setdefault(f, {})
+                    if key is None or (key not in pmap
+                                       and len(pmap) >= max_cardinality):
+                        # non-scalar value or cardinality blown: a partial
+                        # posting list is unsound, drop the whole field
+                        info["postings"] = False
+                        postings.pop(f, None)
+                    else:
+                        pmap.setdefault(key, []).append(pos)
+                if isinstance(v, bool):
+                    v = int(v)
+                if isinstance(v, (int, float)) and v == v:  # NaN never
+                    info["zones"] = True                    # matches ranges
+                    numerics.setdefault(f, []).append((pos, float(v)))
+        zones: Dict[str, List[Optional[List[float]]]] = {}
+        n_blocks = (n + zone_block - 1) // zone_block
+        for f, pairs in numerics.items():
+            blocks: List[Optional[List[float]]] = [None] * n_blocks
+            for pos, fv in pairs:
+                cur = blocks[pos // zone_block]
+                if cur is None:
+                    blocks[pos // zone_block] = [fv, fv]
+                elif fv < cur[0]:
+                    cur[0] = fv
+                elif fv > cur[1]:
+                    cur[1] = fv
+            zones[f] = blocks
+        return cls(n, fields, postings, zones, zone_block)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "v": self.VERSION,
+            "n": self.n,
+            "block": self.block,
+            "fields": self.fields,
+            "postings": self.postings,
+            "zones": self.zones,
+        }
+
+    @staticmethod
+    def from_json(obj: dict) -> "AttributeIndex":
+        return AttributeIndex(
+            int(obj["n"]), obj.get("fields", {}), obj.get("postings", {}),
+            obj.get("zones", {}), int(obj.get("block", AttributeIndex.ZONE_BLOCK)))
+
+    # -- planner surface (consumed by Query.index_plan) ----------------------
+
+    def postings_for(self, field: str) -> Optional[Dict[str, List[int]]]:
+        """Posting lists for ``field``; ``{}`` if the field appears in no
+        record (absent everywhere — itself exact); ``None`` if present but
+        not postings-indexed (planner must not use postings for it)."""
+        info = self.fields.get(field)
+        if info is None:
+            return {}
+        if not info.get("postings"):
+            return None
+        return self.postings.get(field, {})
+
+    def zones_for(self, field: str) -> Optional[List[Optional[List[float]]]]:
+        """Zone blocks for ``field``; ``[]`` if absent everywhere; ``None``
+        if the field has no numeric values to zone-map."""
+        info = self.fields.get(field)
+        if info is None:
+            return []
+        if not info.get("zones"):
+            return None
+        return self.zones.get(field, [])
+
+    def all_positions(self) -> set:
+        return set(range(self.n))
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Summary for ``DatasetHandle.index_stats`` / bench output."""
+        out = {"n_records": self.n, "zone_block": self.block, "fields": {}}
+        for f, info in sorted(self.fields.items()):
+            mode = []
+            if info.get("postings"):
+                mode.append("postings")
+            if info.get("zones"):
+                mode.append("zones")
+            out["fields"][f] = {
+                "present": info.get("present", 0),
+                "indexed": "+".join(mode) if mode else None,
+                "values": len(self.postings.get(f, {}))
+                if info.get("postings") else None,
+            }
+        return out

@@ -41,7 +41,9 @@ import fnmatch
 import hashlib
 import json
 import re
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .index import decode_key as _index_decode_key
 
 __all__ = [
     "Query",
@@ -126,6 +128,21 @@ class Query:
         identical compositions fingerprint identically."""
         return self.to_json()
 
+    # -- index resolution ----------------------------------------------------
+
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        """Resolve this query against a per-commit
+        :class:`~repro.core.index.AttributeIndex`.
+
+        Returns ``(positions, exact)`` where ``positions`` is a **superset**
+        of the matching manifest positions (``exact=True`` means precisely
+        the matches, so re-evaluation can be skipped), or ``None`` when the
+        index cannot bound this query — the caller falls back to a full
+        scan.  Soundness rule: a position may only be *excluded* when the
+        index proves the record cannot match.
+        """
+        return None
+
     def fingerprint(self) -> str:
         """Deterministic digest; THE cache key for snapshot dedup."""
         blob = json.dumps(self.canonical(), sort_keys=True,
@@ -162,6 +179,9 @@ class TrueQuery(Query):
     def __call__(self, entry) -> bool:
         return True
 
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        return index.all_positions(), True
+
     def to_json(self) -> dict:
         return {"op": "true"}
 
@@ -196,6 +216,13 @@ class Cmp(Query):
 
     def __call__(self, entry) -> bool:
         have, present = self._resolve(entry)
+        return self._eval_value(have, present)
+
+    def _eval_value(self, have, present: bool) -> bool:
+        """Evaluate the comparison on an already-resolved ``(value,
+        present)`` pair — shared by entry evaluation and the index planner
+        (which probes posting-class representatives), so the two can never
+        drift semantically."""
         want = self.value
         try:
             if self.cmp == "exists":
@@ -229,6 +256,61 @@ class Cmp(Query):
         except TypeError:
             return False
         raise AssertionError(self.cmp)  # pragma: no cover
+
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        if self.field in ("id", "record_id"):
+            return None  # the record-id pseudo-field is not attr-indexed
+        postings = index.postings_for(self.field)
+        if postings is not None:
+            # Evaluate the predicate once per distinct posting class.  A
+            # numeric class representative (int/float/bool collapse) gives
+            # the same answer as any member for every op except glob, whose
+            # str() differs across the class — include those unconditionally
+            # and let re-evaluation filter.
+            out: set = set()
+            exact = True
+            present: set = set()
+            for key, positions in postings.items():
+                present.update(positions)
+                if self.cmp == "glob" and not key.startswith("s:"):
+                    out.update(positions)
+                    exact = False
+                elif self._eval_value(_index_decode_key(key), True):
+                    out.update(positions)
+            if self._eval_value(None, False):
+                # predicate matches records lacking the field (eq None,
+                # ne ...); posting lists are complete, so absence is exact
+                out |= index.all_positions() - present
+            return out, exact
+        zones = index.zones_for(self.field)
+        if zones is not None and self.cmp in ("eq", "lt", "le", "gt", "ge"):
+            want = self.value
+            if isinstance(want, bool):
+                want = int(want)
+            if isinstance(want, (int, float)):
+                # Only numeric values can satisfy a numeric range predicate
+                # (str <op> number raises -> False; absent fails the present
+                # check), so blocks whose numeric [min, max] cannot reach
+                # the bound are safely pruned.  Superset: re-evaluate.
+                # All comparisons are NON-strict: zone bounds and ``w`` are
+                # float-rounded (ints >= 2**53 collapse), so `lo < w` could
+                # prune a block holding a true `have < want` match whose
+                # float images are equal.  have < want only guarantees
+                # float(have) <= float(want), hence `lo <= w`.
+                w = float(want)
+                out = set()
+                for b, mm in enumerate(zones):
+                    if mm is None:
+                        continue
+                    lo, hi = mm
+                    hit = (lo <= w if self.cmp in ("lt", "le") else
+                           hi >= w if self.cmp in ("gt", "ge") else
+                           lo <= w <= hi)
+                    if hit:
+                        out.update(range(b * index.block,
+                                         min((b + 1) * index.block, index.n)))
+                return out, False
+        return None
 
     @property
     def serializable(self) -> bool:
@@ -264,6 +346,23 @@ class And(Query):
     def __call__(self, entry) -> bool:
         return all(a(entry) for a in self.args)
 
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        # Intersection of whatever conjuncts the index can bound; an
+        # unresolvable conjunct just stops narrowing (and forces re-eval).
+        out: Optional[set] = None
+        exact = True
+        for a in self.args:
+            plan = a.index_plan(index)
+            if plan is None:
+                exact = False
+                continue
+            s, e = plan
+            out = set(s) if out is None else out & s
+            exact = exact and e
+        if out is None:
+            return None
+        return out, exact
+
     @property
     def serializable(self) -> bool:
         return all(a.serializable for a in self.args)
@@ -292,6 +391,19 @@ class Or(Query):
     def __call__(self, entry) -> bool:
         return any(a(entry) for a in self.args)
 
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        # Every disjunct must be bounded, or the union has no upper bound.
+        out: set = set()
+        exact = True
+        for a in self.args:
+            plan = a.index_plan(index)
+            if plan is None:
+                return None
+            s, e = plan
+            out |= s
+            exact = exact and e
+        return out, exact
+
     @property
     def serializable(self) -> bool:
         return all(a.serializable for a in self.args)
@@ -315,6 +427,14 @@ class Not(Query):
 
     def __call__(self, entry) -> bool:
         return not self.arg(entry)
+
+    def index_plan(self, index) -> Optional[Tuple[set, bool]]:
+        # Complement is only sound against an *exact* inner set: the
+        # complement of a superset would drop true matches.
+        plan = self.arg.index_plan(index)
+        if plan is None or not plan[1]:
+            return None
+        return index.all_positions() - plan[0], True
 
     @property
     def serializable(self) -> bool:

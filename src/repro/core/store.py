@@ -17,8 +17,16 @@ Design
   header records the codec so reads are self-describing.
 - A multi-chunk blob gets a *blob manifest* (JSON list of chunk digests)
   stored content-addressed as well; a ``BlobRef`` names the top digest.
-- Integrity: every read re-hashes and verifies; corruption raises
-  :class:`IntegrityError`.
+- Integrity: every read from the backend re-hashes and verifies; corruption
+  raises :class:`IntegrityError`.
+- **Verified-once read cache**: a bounded LRU of raw chunks sits in front of
+  the backend.  Because chunks are content-addressed, a chunk that verified
+  against its digest once can be served from memory without re-reading the
+  backend *or* re-hashing — ``sha256(raw) == digest`` is a property of the
+  bytes, not of the read.  The cache is only populated on verified reads
+  (never on writes), so a corrupted backend is still always detected the
+  first time a chunk is fetched, and revocation/GC evict eagerly so deleted
+  payloads cannot be served from memory after the backend forgot them.
 - Garbage collection is mark-and-sweep from a caller-provided root set
   (commits / manifests / lineage heads own references).
 
@@ -36,8 +44,9 @@ import tempfile
 import threading
 import zlib
 from abc import ABC, abstractmethod
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Iterator, List, Optional, Set
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple, Union
 
 __all__ = [
     "StorageBackend",
@@ -186,12 +195,39 @@ class FileBackend(StorageBackend):
         except FileNotFoundError:
             pass
 
+    @staticmethod
+    def _listdir(path: str) -> List[str]:
+        try:
+            return sorted(os.listdir(path))
+        except (FileNotFoundError, NotADirectoryError):
+            return []
+
     def list_keys(self, prefix: str = "") -> Iterator[str]:
-        for dirpath, _dirnames, filenames in os.walk(self.root):
-            for name in filenames:
-                key = self._decode_key(name)
-                if key.startswith(prefix):
-                    yield key
+        # The key encoding substitutes per character, so ``encode(prefix)``
+        # is a string prefix of ``encode(key)`` exactly when ``prefix`` is a
+        # prefix of ``key`` — which lets the walk skip every fan-out
+        # directory inconsistent with the first four encoded characters
+        # instead of touching all chunk dirs for a ``meta/`` listing.
+        safe = self._encode_key(prefix)
+        if len(safe) < 4:  # only then can a __short__ (len<4) key match
+            for name in self._listdir(os.path.join(self.root, "__short__")):
+                if name.startswith(safe):
+                    key = self._decode_key(name)
+                    if key.startswith(prefix):
+                        yield key
+        want1, want2 = safe[:2], safe[2:4]
+        for d1 in self._listdir(self.root):
+            if d1 == "__short__" or len(d1) != 2 or not d1.startswith(want1):
+                continue
+            for d2 in self._listdir(os.path.join(self.root, d1)):
+                if len(d2) != 2 or not d2.startswith(want2):
+                    continue
+                for name in self._listdir(os.path.join(self.root, d1, d2)):
+                    if not name.startswith(safe):
+                        continue
+                    key = self._decode_key(name)
+                    if key.startswith(prefix):
+                        yield key
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +256,12 @@ class StoreStats:
     puts: int = 0
     gets: int = 0
     dedup_hits: int = 0
+    cache_hits: int = 0
     bytes_in: int = 0
     bytes_stored: int = 0
+
+
+DEFAULT_CACHE_BYTES = 64 * 1024 * 1024
 
 
 class ObjectStore:
@@ -238,6 +278,7 @@ class ObjectStore:
         backend: Optional[StorageBackend] = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         compress: bool = True,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
     ) -> None:
         if chunk_size <= 0:
             raise ValueError("chunk_size must be positive")
@@ -245,6 +286,50 @@ class ObjectStore:
         self.chunk_size = chunk_size
         self.compress = compress
         self.stats = StoreStats()
+        # Verified-once chunk cache (see module docstring): digest -> raw
+        # bytes, bounded by total payload size, LRU eviction.  Thread-safe:
+        # the loader prefetch thread and workflow workers read concurrently.
+        self._cache_cap = max(0, int(cache_bytes))
+        self._cache: "OrderedDict[str, bytes]" = OrderedDict()
+        self._cache_size = 0
+        self._cache_lock = threading.Lock()
+
+    # -- verified-once chunk cache -----------------------------------------
+
+    def _cache_get(self, digest: str) -> Optional[bytes]:
+        if not self._cache_cap:
+            return None
+        with self._cache_lock:
+            raw = self._cache.get(digest)
+            if raw is not None:
+                self._cache.move_to_end(digest)
+                self.stats.cache_hits += 1
+            return raw
+
+    def _cache_put(self, digest: str, raw: bytes) -> None:
+        if not self._cache_cap or len(raw) > self._cache_cap:
+            return
+        with self._cache_lock:
+            if digest in self._cache:
+                self._cache.move_to_end(digest)
+                return
+            self._cache[digest] = raw
+            self._cache_size += len(raw)
+            while self._cache_size > self._cache_cap:
+                _, evicted = self._cache.popitem(last=False)
+                self._cache_size -= len(evicted)
+
+    def _cache_evict(self, digest: str) -> None:
+        with self._cache_lock:
+            evicted = self._cache.pop(digest, None)
+            if evicted is not None:
+                self._cache_size -= len(evicted)
+
+    def cache_info(self) -> Dict[str, int]:
+        with self._cache_lock:
+            return {"entries": len(self._cache), "bytes": self._cache_size,
+                    "capacity": self._cache_cap,
+                    "hits": self.stats.cache_hits}
 
     # -- chunk plumbing ----------------------------------------------------
 
@@ -283,9 +368,12 @@ class ObjectStore:
         return digest
 
     def _get_chunk(self, digest: str) -> bytes:
-        raw = self._decode(self.backend.get(self._CHUNK + digest))
-        if sha256_hex(raw) != digest:
-            raise IntegrityError(f"chunk {digest[:12]}… failed verification")
+        raw = self._cache_get(digest)
+        if raw is None:
+            raw = self._decode(self.backend.get(self._CHUNK + digest))
+            if sha256_hex(raw) != digest:
+                raise IntegrityError(f"chunk {digest[:12]}… failed verification")
+            self._cache_put(digest, raw)
         self.stats.gets += 1
         return raw
 
@@ -326,6 +414,45 @@ class ObjectStore:
             return out
         return self._get_chunk(digest)
 
+    def get_blobs(self, refs: Sequence[Union[BlobRef, str]]) -> List[bytes]:
+        """Fetch many blobs in one call.
+
+        Resolves every blob manifest up front (one grouped metadata pass),
+        then fetches each distinct chunk digest exactly once per call — so a
+        batch whose blobs share chunks (dedup) pays one backend read per
+        unique chunk, and the verified-once cache serves repeats for free.
+        """
+        plans: List[Tuple[List[str], Optional[int]]] = []
+        for ref in refs:
+            if isinstance(ref, BlobRef):
+                digest, n_chunks = ref.digest, ref.n_chunks
+            else:
+                digest, n_chunks = ref, None
+            if n_chunks == 1:
+                plans.append(([digest], None))
+                continue
+            man_key = self._BLOBMAN + digest
+            if self.backend.exists(man_key):
+                man = json.loads(self.backend.get(man_key))
+                plans.append((list(man["chunks"]), int(man["size"])))
+            else:
+                plans.append(([digest], None))
+        fetched: Dict[str, bytes] = {}
+        out: List[bytes] = []
+        for chunks, size in plans:
+            parts: List[bytes] = []
+            for d in chunks:
+                raw = fetched.get(d)
+                if raw is None:
+                    raw = self._get_chunk(d)
+                    fetched[d] = raw
+                parts.append(raw)
+            data = parts[0] if len(parts) == 1 else b"".join(parts)
+            if size is not None and len(data) != size:
+                raise IntegrityError("blob size mismatch")
+            out.append(data)
+        return out
+
     def has_blob(self, digest: str) -> bool:
         return self.backend.exists(self._CHUNK + digest) or self.backend.exists(
             self._BLOBMAN + digest
@@ -338,9 +465,11 @@ class ObjectStore:
         if self.backend.exists(man_key):
             man = json.loads(self.backend.get(man_key))
             for d in man["chunks"]:
+                self._cache_evict(d)
                 self.backend.delete(self._CHUNK + d)
             self.backend.delete(man_key)
         else:
+            self._cache_evict(digest)
             self.backend.delete(self._CHUNK + digest)
 
     # -- JSON convenience (commits, manifests, graphs) -----------------------
@@ -401,5 +530,7 @@ class ObjectStore:
             if not k.startswith(self.META) and k not in live
         ]
         for k in dead:
+            if k.startswith(self._CHUNK):
+                self._cache_evict(k[len(self._CHUNK):])
             self.backend.delete(k)
         return len(dead)

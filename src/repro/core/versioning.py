@@ -13,10 +13,13 @@ branches, tags, three-way merge and O(changed) diffs.
 
 from __future__ import annotations
 
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+from .index import AttributeIndex
 from .store import BlobRef, NotFoundError, ObjectStore, sha256_hex
 
 __all__ = [
@@ -47,6 +50,16 @@ class RecordEntry:
     @staticmethod
     def from_json(obj: dict) -> "RecordEntry":
         return RecordEntry(obj["id"], BlobRef.from_json(obj["blob"]), obj.get("attrs", {}))
+
+    @staticmethod
+    def from_raw(obj: dict) -> "RecordEntry":
+        """Deserialize one raw (possibly cache-shared) manifest record —
+        attrs are copied so callers never alias the shared parse.  The ONE
+        deserializer behind both checkout paths (full scan via
+        ``get_manifest`` and index-pruned candidates), so they cannot
+        drift."""
+        return RecordEntry(obj["id"], BlobRef.from_json(obj["blob"]),
+                           dict(obj.get("attrs", {})))
 
 
 class Manifest:
@@ -169,16 +182,85 @@ class VersionStore:
     ``refs/<dataset>/tags/<tag>`` point at commit ids.
     """
 
+    # Parsed-manifest cache size.  Trees are content-addressed (immutable),
+    # so entries can never go stale; the cap only bounds memory.
+    _RECORDS_CACHE_CAP = 4
+    _INDEX_CACHE_CAP = 8
+
     def __init__(self, store: ObjectStore) -> None:
         self.store = store
+        self._cache_lock = threading.Lock()
+        self._records_cache: "OrderedDict[str, list]" = OrderedDict()
+        self._index_cache: "OrderedDict[str, Optional[AttributeIndex]]" = \
+            OrderedDict()
 
     # -- manifests -----------------------------------------------------------
 
     def put_manifest(self, manifest: Manifest) -> str:
         return self.store.put_json(manifest.to_json()).digest
 
+    def get_raw_records(self, tree_digest: str) -> list:
+        """The manifest's parsed ``records`` list (record-id-sorted), cached.
+
+        This is the checkout hot path: repeated checkouts of the same commit
+        skip the JSON parse entirely, and index-pruned checkouts construct
+        :class:`RecordEntry` objects only at candidate positions.  Callers
+        must treat the returned list and its dicts as immutable.
+        """
+        with self._cache_lock:
+            hit = self._records_cache.get(tree_digest)
+            if hit is not None:
+                self._records_cache.move_to_end(tree_digest)
+                return hit
+        records = self.store.get_json(tree_digest).get("records", [])
+        with self._cache_lock:
+            self._records_cache[tree_digest] = records
+            while len(self._records_cache) > self._RECORDS_CACHE_CAP:
+                self._records_cache.popitem(last=False)
+        return records
+
     def get_manifest(self, tree_digest: str) -> Manifest:
-        return Manifest.from_json(self.store.get_json(tree_digest))
+        return Manifest(RecordEntry.from_raw(o)
+                        for o in self.get_raw_records(tree_digest))
+
+    # -- attribute index (built at commit, drives checkout pruning) ----------
+
+    def _attr_index_meta_key(self, tree_digest: str) -> str:
+        return f"attridx/{tree_digest}"
+
+    def ensure_attr_index(self, tree_digest: str,
+                          manifest: Manifest) -> None:
+        """Write the content-addressed attribute index blob for ``tree``
+        (idempotent — identical manifests share one index)."""
+        key = self._attr_index_meta_key(tree_digest)
+        ptr = self.store.get_meta(key)
+        if ptr is not None and self.store.has_blob(ptr["blob"]):
+            return  # pointer must not satisfy us if the blob was GC'd
+        idx = AttributeIndex.build(manifest.entries())
+        ref = self.store.put_json(idx.to_json())
+        self.store.put_meta(key, {"blob": ref.digest, "v": idx.VERSION})
+        with self._cache_lock:
+            self._index_cache.pop(tree_digest, None)
+
+    def get_attr_index(self, tree_digest: str) -> Optional[AttributeIndex]:
+        """Load (cached) the attribute index for a tree; ``None`` for
+        pre-index commits — callers fall back to a full scan."""
+        with self._cache_lock:
+            if tree_digest in self._index_cache:
+                self._index_cache.move_to_end(tree_digest)
+                return self._index_cache[tree_digest]
+        ptr = self.store.get_meta(self._attr_index_meta_key(tree_digest))
+        idx: Optional[AttributeIndex] = None
+        if ptr is not None:
+            try:
+                idx = AttributeIndex.from_json(self.store.get_json(ptr["blob"]))
+            except NotFoundError:
+                idx = None
+        with self._cache_lock:
+            self._index_cache[tree_digest] = idx
+            while len(self._index_cache) > self._INDEX_CACHE_CAP:
+                self._index_cache.popitem(last=False)
+        return idx
 
     # -- commits ---------------------------------------------------------------
 
@@ -193,6 +275,7 @@ class VersionStore:
         timestamp: Optional[float] = None,
     ) -> Commit:
         tree = self.put_manifest(manifest)
+        self.ensure_attr_index(tree, manifest)
         body = {
             "dataset": dataset,
             "tree": tree,
@@ -353,6 +436,12 @@ class VersionStore:
             except NotFoundError:
                 continue
             out.append(c.tree)
+            # the tree's attribute index blob is owned by the commit too —
+            # without this root, the first gc() would sweep every index and
+            # degrade all filtered checkouts to full scans permanently
+            ptr = self.store.get_meta(self._attr_index_meta_key(c.tree))
+            if ptr is not None:
+                out.append(ptr["blob"])
             for e in self.get_manifest(c.tree).entries():
                 out.append(e.blob.digest)
         return out

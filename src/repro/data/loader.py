@@ -51,10 +51,38 @@ LoaderState = Dict[str, Any]
 
 
 def _order(record_ids: List[str], epoch: int, seed: int) -> List[str]:
+    """Reference epoch ordering — records sorted by seeded per-record hash.
+
+    Kept as the executable spec: :func:`_order_fast` must stay bit-identical
+    to this (the golden determinism suite pins it), or existing checkpoints
+    would silently restore onto different batch streams.
+    """
     def key(rid: str) -> str:
         return hashlib.sha256(f"{seed}:{epoch}:{rid}".encode()).hexdigest()
 
     return sorted(record_ids, key=key)
+
+
+def _order_fast(record_ids: List[str], epoch: int, seed: int) -> List[str]:
+    """Same permutation as :func:`_order`, computed vectorized.
+
+    Hashes every id in one pass (the sha256 per record is load-bearing —
+    it IS the ordering key), then argsorts the packed digest matrix with
+    ``np.lexsort``.  Sorting by raw digest bytes equals sorting by
+    ``hexdigest()`` because hex encoding is monotone bytewise; lexsort over
+    the four big-endian u64 columns equals bytewise comparison of the
+    32-byte digests, and both sorts are stable, so ties (impossible for
+    distinct ids in practice) break identically.
+    """
+    if not record_ids:
+        return []
+    prefix = f"{seed}:{epoch}:".encode()
+    sha = hashlib.sha256
+    digests = b"".join(sha(prefix + rid.encode()).digest()
+                       for rid in record_ids)
+    cols = np.frombuffer(digests, dtype=">u8").reshape(-1, 4)
+    perm = np.lexsort((cols[:, 3], cols[:, 2], cols[:, 1], cols[:, 0]))
+    return [record_ids[i] for i in perm]
 
 
 class ShardedSnapshotLoader:
@@ -68,6 +96,7 @@ class ShardedSnapshotLoader:
         seed: int = 0,
         prefetch: int = 2,
         timeout_s: float = 60.0,
+        cache_epoch_orders: bool = True,
     ):
         assert batch_size % n_shards == 0
         self.snapshot = snapshot
@@ -82,6 +111,11 @@ class ShardedSnapshotLoader:
         self.epoch = 0
         self.step = 0
         self._content = snapshot.content_digest()
+        # ``cache_epoch_orders=False`` restores the pre-cache behaviour
+        # (recompute the permutation every batch) — benchmark baseline only.
+        self.cache_epoch_orders = cache_epoch_orders
+        self._ids: Optional[List[str]] = None
+        self._order_cache: Dict[tuple, List[str]] = {}
 
     # ---------------------------------------------------------------- state
 
@@ -101,16 +135,48 @@ class ShardedSnapshotLoader:
 
     # ---------------------------------------------------------------- batches
 
-    def _epoch_order(self, epoch: int) -> List[str]:
-        return _order(self.snapshot.record_ids(), epoch, self.seed)
+    def _record_ids(self) -> List[str]:
+        if self._ids is None:
+            self._ids = list(self.snapshot.record_ids())
+        return self._ids
 
-    def _read(self, rid: str) -> Dict[str, np.ndarray]:
-        tokens, segments, positions = decode_packed(self.snapshot.read(rid))
+    def _epoch_order(self, epoch: int) -> List[str]:
+        """Deterministic epoch permutation, computed once per (epoch, seed).
+
+        The per-batch cost drops from O(N) hashing + O(N log N) sorting to
+        a dict hit; ordering stays bit-identical to :func:`_order` (golden
+        tests), so checkpoints restore onto identical batch streams.
+        """
+        if not self.cache_epoch_orders:
+            return _order(self._record_ids(), epoch, self.seed)
+        key = (epoch, self.seed)
+        order = self._order_cache.get(key)
+        if order is None:
+            order = _order_fast(self._record_ids(), epoch, self.seed)
+            # keep the current and previous epoch only (restore() can step
+            # back); anything older is dead weight
+            self._order_cache = {
+                k: v for k, v in self._order_cache.items()
+                if k[0] >= epoch - 1 and k[1] == self.seed}
+            self._order_cache[key] = order
+        return order
+
+    def _decode_row(self, payload: bytes) -> Dict[str, np.ndarray]:
+        tokens, segments, positions = decode_packed(payload)
         L = self.seq_len
         return {
             "tokens": tokens[:L], "labels": tokens[1:L + 1],
             "segments": segments[:L], "positions": positions[:L],
         }
+
+    def _read(self, rid: str) -> Dict[str, np.ndarray]:
+        return self._decode_row(self.snapshot.read(rid))
+
+    def _read_rows(self, rids: List[str]) -> List[Dict[str, np.ndarray]]:
+        reader = getattr(self.snapshot, "read_batch", None)
+        if reader is not None:
+            return [self._decode_row(buf) for buf in reader(rids)]
+        return [self._read(rid) for rid in rids]
 
     def next_batch(self) -> Dict[str, np.ndarray]:
         """The local (per-shard) slice of global batch ``self.step``."""
@@ -123,10 +189,9 @@ class ShardedSnapshotLoader:
             self.epoch += 1
             order = self._epoch_order(self.epoch)
         base = step_in_epoch * self.batch
-        rows = []
-        for j in range(self.local_batch):
-            global_idx = base + self.shard_id + j * self.n_shards
-            rows.append(self._read(order[global_idx]))
+        rids = [order[base + self.shard_id + j * self.n_shards]
+                for j in range(self.local_batch)]
+        rows = self._read_rows(rids)
         self.step += 1
         out = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
         # mask labels at padding (segment -1)
@@ -137,14 +202,29 @@ class ShardedSnapshotLoader:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
 
+        def _put(item) -> bool:
+            # Never block forever on a full queue: the consumer may be gone
+            # (generator closed / errored), so re-check ``stop`` between
+            # bounded put attempts instead of deadlocking the worker.
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
         def worker():
             while not stop.is_set():
                 try:
-                    q.put(self.next_batch(), timeout=1.0)
-                except queue.Full:
-                    continue
+                    item = self.next_batch()
                 except Exception as e:  # surface errors to the consumer
-                    q.put(e)
+                    _put(e)
+                    return
+                # the batch is computed exactly once, then offered until it
+                # lands (the old put-or-recompute loop silently dropped a
+                # batch each time the queue was full at the wrong moment)
+                if not _put(item):
                     return
 
         t = threading.Thread(target=worker, daemon=True)
@@ -157,6 +237,13 @@ class ShardedSnapshotLoader:
                 yield item
         finally:
             stop.set()
+            # drain so a worker mid-``put`` wakes immediately, then reap it
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=5.0)
 
     # ---------------------------------------------------------------- device
 

@@ -165,6 +165,16 @@ class Platform:
     def gc(self) -> int:
         return self.manager.gc()
 
+    # ------------------------------------------------------------------ stats
+
+    def store_stats(self) -> dict:
+        """Storage-engine counters incl. the verified-once read cache."""
+        from dataclasses import asdict
+
+        out = asdict(self.store.stats)
+        out["cache"] = self.store.cache_info()
+        return out
+
     # ------------------------------------------------------------------ workflows
 
     def register(self, workflow: Workflow) -> None:
@@ -245,11 +255,29 @@ class DatasetHandle:
         limit: Optional[int] = None,
         shard: Optional[Tuple[int, int]] = None,
         actor: Optional[str] = None,
+        use_index: bool = True,
     ) -> CheckoutPlan:
-        """Lazy checkout plan — streamable, shardable, fingerprinted."""
+        """Lazy checkout plan — streamable, shardable, fingerprinted.
+
+        ``use_index=False`` forces the full-scan path (identical results;
+        exists for benchmarking and as an escape hatch).
+        """
         return self._dm.plan_checkout(self.name, self._actor(actor), rev=rev,
                                       where=where, attrs_equal=attrs_equal,
-                                      limit=limit, shard=shard)
+                                      limit=limit, shard=shard,
+                                      use_index=use_index)
+
+    def index_stats(self, rev: str = "main",
+                    actor: Optional[str] = None) -> Optional[dict]:
+        """Attribute-index summary for one version (``None`` when the commit
+        predates attribute indexing): record count plus, per field, how it
+        is indexed (postings / zones) and its posting cardinality."""
+        self._dm.acl.check(self._actor(actor), "READ", self.name,
+                           note=f"index_stats:{rev}")
+        commit_id = self.versions.resolve(self.name, rev)
+        tree = self.versions.get_commit(commit_id).tree
+        index = self.versions.get_attr_index(tree)
+        return index.stats() if index is not None else None
 
     def checkout(
         self,

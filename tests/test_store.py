@@ -89,6 +89,137 @@ def test_json_roundtrip(store):
     assert store.get_json(ref) == obj
 
 
+# -- verified-once chunk cache ----------------------------------------------
+
+
+def test_cache_hits_skip_backend_and_rehash(store):
+    ref = store.put_blob(b"hot payload " * 100)
+    assert store.get_blob(ref) == b"hot payload " * 100   # cold: verify+fill
+    h0 = store.stats.cache_hits
+    for _ in range(3):
+        assert store.get_blob(ref) == b"hot payload " * 100
+    assert store.stats.cache_hits == h0 + 3 * ref.n_chunks
+
+
+def test_cache_never_populated_on_write():
+    backend = MemoryBackend()
+    store = ObjectStore(backend, chunk_size=1024, compress=False)
+    ref = store.put_blob(b"important bytes")
+    key = "c-" + ref.digest
+    raw = backend.get(key)
+    backend.put(key, raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+    # corruption is detected on first read: puts must not seed the cache
+    with pytest.raises(IntegrityError):
+        store.get_blob(ref)
+
+
+def test_cache_serves_verified_bytes_after_backend_corruption():
+    backend = MemoryBackend()
+    store = ObjectStore(backend, chunk_size=1024, compress=False)
+    ref = store.put_blob(b"good bytes")
+    assert store.get_blob(ref) == b"good bytes"           # verified once
+    key = "c-" + ref.digest
+    backend.put(key, b"\x00" * 8)                         # trash the backend
+    assert store.get_blob(ref) == b"good bytes"           # served from cache
+
+
+def test_cache_eviction_respects_byte_budget():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024, compress=False,
+                        cache_bytes=2048)
+    refs = [store.put_blob(os.urandom(1000)) for _ in range(4)]
+    for r in refs:
+        store.get_blob(r)
+    info = store.cache_info()
+    assert info["bytes"] <= 2048
+    assert info["entries"] == 2                           # LRU kept the tail
+
+
+def test_cache_disabled_with_zero_budget():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024, cache_bytes=0)
+    ref = store.put_blob(b"x" * 500)
+    for _ in range(3):
+        store.get_blob(ref)
+    assert store.stats.cache_hits == 0
+
+
+def test_delete_blob_evicts_cache(store):
+    data = os.urandom(5000)
+    ref = store.put_blob(data)
+    assert store.get_blob(ref) == data                    # cache warm
+    store.delete_blob(ref)
+    with pytest.raises(NotFoundError):                    # not served hot
+        store.get_blob(ref)
+
+
+def test_gc_evicts_cache(store):
+    keep = store.put_blob(os.urandom(3000))
+    drop = store.put_blob(os.urandom(3000))
+    store.get_blob(drop)                                  # cache warm
+    store.gc(roots=[keep.digest])
+    with pytest.raises(NotFoundError):
+        store.get_blob(drop)
+
+
+# -- batched reads -----------------------------------------------------------
+
+
+def test_get_blobs_matches_get_blob(store):
+    blobs = [os.urandom(300), os.urandom(5000), b"", os.urandom(1024 * 3)]
+    refs = [store.put_blob(b) for b in blobs]
+    assert store.get_blobs(refs) == blobs
+    assert store.get_blobs([r.digest for r in refs]) == blobs
+    assert store.get_blobs([]) == []
+
+
+def test_get_blobs_dedups_shared_chunks():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024, compress=False,
+                        cache_bytes=0)
+    data = os.urandom(4000)
+    ref = store.put_blob(data)
+    g0 = store.stats.gets
+    out = store.get_blobs([ref, ref, ref])
+    assert out == [data, data, data]
+    # each unique chunk fetched once per call, not once per blob
+    assert store.stats.gets - g0 == ref.n_chunks
+
+
+# -- pruned FileBackend listing ----------------------------------------------
+
+
+def test_file_backend_list_keys_pruned_walk(tmp_path):
+    be = FileBackend(str(tmp_path / "cas"))
+    keys = ["meta/refs/a", "meta/refs/b", "meta/commits/x",
+            "c-" + "ab" * 32, "c-" + "cd" * 32, "b-" + "ef" * 32, "xy"]
+    for k in keys:
+        be.put(k, b"v")
+    assert sorted(be.list_keys()) == sorted(keys)
+    assert sorted(be.list_keys("meta/")) == sorted(
+        k for k in keys if k.startswith("meta/"))
+    assert sorted(be.list_keys("meta/refs/")) == ["meta/refs/a",
+                                                  "meta/refs/b"]
+    assert list(be.list_keys("c-ab")) == ["c-" + "ab" * 32]
+    assert list(be.list_keys("xy")) == ["xy"]             # __short__ dir
+    assert list(be.list_keys("zz")) == []
+
+
+def test_file_backend_list_keys_does_not_walk_chunk_dirs(tmp_path, monkeypatch):
+    be = FileBackend(str(tmp_path / "cas"))
+    for i in range(20):
+        be.put("c-" + ("%02x" % i) * 32, b"v")
+    be.put("meta/refs/a", b"v")
+    visited = []
+    real_listdir = os.listdir
+
+    def spy(path):
+        visited.append(os.fspath(path))
+        return real_listdir(path)
+
+    monkeypatch.setattr(os, "listdir", spy)
+    assert list(be.list_keys("meta/")) == ["meta/refs/a"]
+    # root + the one matching fan-out level-1/level-2 dir; no chunk dirs
+    assert len(visited) <= 4
+
+
 @settings(max_examples=50, deadline=None)
 @given(data=st.binary(min_size=0, max_size=8192))
 def test_property_roundtrip_any_bytes(data):
