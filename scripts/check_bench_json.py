@@ -18,6 +18,9 @@ REQUIRED_ROWS = {
         "checkout_filtered_indexed",
         "cas_read_all_nocache",
         "cas_read_all_cached",
+        "derive_cold",
+        "derive_cached",
+        "derive_incremental",
     ),
     "loader": (
         "loader_steady_state_legacy",
@@ -25,8 +28,18 @@ REQUIRED_ROWS = {
     ),
 }
 REQUIRED_METRICS = {
-    "platform": ("checkout_filtered_speedup", "cas_cache_hits"),
+    "platform": ("checkout_filtered_speedup", "cas_cache_hits",
+                 "derive_cached_speedup", "derive_incremental_speedup"),
     "loader": ("loader_steady_state_speedup",),
+}
+# Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
+# committed trajectory must show cached ≫ cold and incremental ≫ cold;
+# smoke runs get a lower floor so loaded CI machines don't flake.
+RATIO_FLOORS = {
+    "platform": {
+        "derive_cached_speedup": (10.0, 3.0),
+        "derive_incremental_speedup": (10.0, 3.0),
+    },
 }
 
 
@@ -50,10 +63,21 @@ def check(path: str) -> None:
         missing = set(names) - have
         if missing:
             raise ValueError(f"section {section!r} missing rows {sorted(missing)}")
-        mmissing = set(REQUIRED_METRICS[section]) - set(body.get("metrics", {}))
+        metrics = body.get("metrics", {})
+        mmissing = set(REQUIRED_METRICS[section]) - set(metrics)
         if mmissing:
             raise ValueError(
                 f"section {section!r} missing metrics {sorted(mmissing)}")
+        smoke = bool(body.get("smoke"))
+        for metric, (full_floor, smoke_floor) in \
+                RATIO_FLOORS.get(section, {}).items():
+            floor = smoke_floor if smoke else full_floor
+            value = metrics[metric]
+            if not isinstance(value, (int, float)) or value < floor:
+                raise ValueError(
+                    f"section {section!r} metric {metric}={value!r} below "
+                    f"the {'smoke ' if smoke else ''}contract floor "
+                    f"{floor}x")
 
 
 def main(argv) -> int:

@@ -16,6 +16,8 @@ Examples:
     repro-cli --repo /tmp/repo checkout mydata --out /tmp/restore
     repro-cli --repo /tmp/repo checkout mydata --where 'lang=en & split!=test'
     repro-cli --repo /tmp/repo checkout mydata --where 'size>=1024 | tags~=gold*'
+    repro-cli --repo /tmp/repo derive mydata --pipeline clean \\
+        --where 'lang=en' --output mydata-clean --pipelines-module my.pipes
     repro-cli --repo /tmp/repo tag mydata golden
     repro-cli --repo /tmp/repo datasets --tags text
     repro-cli --repo /tmp/repo log mydata
@@ -33,7 +35,8 @@ import os
 import sys
 from typing import List, Optional
 
-from .core import NotFoundError, QueryParseError, Record, parse_where
+from .core import (NotFoundError, QueryParseError, Record, get_pipeline,
+                   parse_where)
 from .core.query import ALL
 from .platform import Platform
 
@@ -84,6 +87,37 @@ def cmd_checkout(plat: Platform, args) -> int:
     digest = plan.query_digest()
     print(f"snapshot {snap.snapshot_id} @ {snap.commit_id[:12]} "
           f"(query {digest[:12] if digest else 'opaque'})")
+    return 0
+
+
+def cmd_derive(plat: Platform, args) -> int:
+    """Run a registered pipeline over a queried checkout — cached,
+    incremental, streaming (the derivation engine)."""
+    if args.pipelines_module:
+        import importlib
+
+        try:
+            importlib.import_module(args.pipelines_module)
+        except ImportError as e:
+            raise NotFoundError(
+                f"cannot import --pipelines-module "
+                f"{args.pipelines_module!r}: {e}") from e
+    pipeline = get_pipeline(args.pipeline)
+    res = plat.dataset(args.dataset).derive(
+        pipeline, output=args.output, rev=args.rev,
+        where=_parse_where_args(args.where),
+        use_cache=not args.no_cache, incremental=not args.no_cache,
+        update_cache=not args.no_cache,
+    )
+    print(f"derivation {res.key or 'opaque (uncached)'}")
+    if res.cache_hit:
+        print(f"cache hit: {res.n_inputs} record(s), 0 executed")
+    else:
+        print(f"cache miss: {res.n_executed} executed, "
+              f"{res.n_reused} reused of {res.n_inputs} record(s) "
+              f"-> {res.n_outputs} output record(s)"
+              + (" [incremental]" if res.incremental else ""))
+    print(f"output commit {res.output_commit}")
     return 0
 
 
@@ -190,6 +224,27 @@ def main(argv: Optional[List[str]] = None) -> int:
                             "JSON + fingerprint")
     p.add_argument("--where", action="append", required=True)
     p.set_defaults(fn=cmd_query)
+
+    p = sub.add_parser("derive",
+                       help="run a registered pipeline over a queried "
+                            "checkout and check the result into --output "
+                            "(cached on the derivation key)")
+    p.add_argument("dataset")
+    p.add_argument("--pipeline", required=True,
+                   help="pipeline name registered via "
+                        "repro.core.derive.register_pipeline")
+    p.add_argument("--output", required=True,
+                   help="dataset the derived version is checked into")
+    p.add_argument("--rev", default="main")
+    p.add_argument("--where", action="append",
+                   help="same query algebra as checkout (repeats ANDed)")
+    p.add_argument("--pipelines-module",
+                   help="import this module first so it can register "
+                        "pipelines")
+    p.add_argument("--no-cache", action="store_true",
+                   help="force a full recompute; do not read or write "
+                        "the derivation cache")
+    p.set_defaults(fn=cmd_derive)
 
     p = sub.add_parser("datasets")
     p.add_argument("--glob", default="*")

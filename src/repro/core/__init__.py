@@ -11,13 +11,18 @@ its engine, importable directly for embedding and tests:
   ACL enforcement).
 - Access control: :class:`AccessController`.
 - Transformation: :class:`Component` / :class:`Pipeline` (+ human tasks).
+- Derivation engine: :class:`DerivationEngine` (content-addressed
+  derivation cache, incremental recompute, streaming sharded execution).
 - Workflow manager: :class:`WorkflowManager` (triggers, scheduling,
-  straggler-tolerant sharded runs).
+  straggler-tolerant sharded runs on the derivation engine).
 - Lineage: :class:`LineageGraph`; revocation: :class:`RevocationEngine`.
 """
 
 from .acl import AccessController, Action, PermissionError_
 from .dataset import CheckoutPlan, DatasetManager, Record, Snapshot
+from .derive import (Derivation, DerivationCache, DerivationEngine,
+                     DerivationResult, ExecPolicy, get_pipeline,
+                     register_pipeline, registered_pipelines)
 from .index import AttributeIndex
 from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import (ALL, And, Cmp, Not, Or, Query, QueryParseError, attr,
@@ -37,6 +42,9 @@ from .workflow import (RunState, ShardReport, Workflow, WorkflowManager,
 __all__ = [
     "AccessController", "Action", "PermissionError_",
     "CheckoutPlan", "DatasetManager", "Record", "Snapshot",
+    "Derivation", "DerivationCache", "DerivationEngine", "DerivationResult",
+    "ExecPolicy", "get_pipeline", "register_pipeline",
+    "registered_pipelines",
     "ALL", "And", "Cmp", "Not", "Or", "Query", "QueryParseError", "attr",
     "parse_where", "record_id_in", "tag_in",
     "EdgeKind", "LineageGraph", "NodeKind",

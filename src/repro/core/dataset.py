@@ -284,6 +284,24 @@ class CheckoutPlan:
         deduping onto an existing snapshot node for identical plans."""
         return self._dm._materialize(self, register=register)
 
+    def transform(self, pipeline, output: Optional[str] = None,
+                  actor: str = "derive", **kwargs):
+        """Derive a new version by running ``pipeline`` over this plan's
+        record stream — cached, incremental, streaming (see
+        :class:`repro.core.derive.DerivationEngine`).
+
+        ``output`` names the dataset the result is checked into; with a
+        serializable query the derivation is cached on (commit, query,
+        pipeline) and an identical call short-circuits to the cached
+        output commit.  Returns a
+        :class:`~repro.core.derive.DerivationResult`.
+        """
+        from .derive import DerivationEngine
+
+        engine = DerivationEngine.for_manager(self._dm)
+        return engine.derive(self, pipeline, output_dataset=output,
+                             actor=actor, **kwargs)
+
     def __repr__(self) -> str:
         return (f"CheckoutPlan({self.dataset}@{self.rev}, "
                 f"commit={self.commit_id[:12]}, "
@@ -386,8 +404,19 @@ class DatasetManager:
         derived_from: Sequence[str] = (),
         produced_by: Optional[str] = None,
         meta: Optional[Mapping[str, object]] = None,
+        replace: bool = False,
     ) -> Commit:
         """Add/replace records on top of ``base`` (default: branch head).
+
+        ``records`` may mix :class:`Record` (payload bytes, stored here)
+        and :class:`RecordEntry` (a ref whose blob is already in the CAS —
+        the derivation engine's reuse path, which must not re-hash
+        unchanged payloads).
+
+        ``replace=True`` makes the new manifest exactly ``records``
+        (materialized-view semantics: base records not re-supplied are
+        dropped); the commit still parents onto ``base`` so history and
+        diffs are preserved.
 
         ``derived_from`` — lineage node ids this version derives from.
         ``produced_by``  — workflow/component run node id.
@@ -401,11 +430,15 @@ class DatasetManager:
             if base_id
             else Manifest()
         )
-        manifest = base_manifest.copy()
+        manifest = Manifest() if replace else base_manifest.copy()
         new_ids: List[str] = []
         for rec in records:
-            ref = self.store.put_blob(rec.data)
-            manifest.add(RecordEntry(rec.record_id, ref, dict(rec.attrs)))
+            if isinstance(rec, RecordEntry):
+                manifest.add(RecordEntry(rec.record_id, rec.blob,
+                                         dict(rec.attrs)))
+            else:
+                ref = self.store.put_blob(rec.data)
+                manifest.add(RecordEntry(rec.record_id, ref, dict(rec.attrs)))
             new_ids.append(rec.record_id)
         for rid in remove_ids:
             manifest.remove(rid)
@@ -688,8 +721,17 @@ class DatasetManager:
         return out
 
     def gc(self) -> int:
-        """Collect unreferenced blobs (after revocations / history pruning)."""
+        """Collect unreferenced blobs (after revocations / history pruning).
+
+        Roots: every dataset's live digests plus the derivation cache (its
+        map blob, provenance blobs, and cached prefix-output payloads) —
+        a gc must not silently turn every cached derivation into a cold
+        recompute.
+        """
+        from .derive import derivation_gc_roots
+
         roots: List[str] = []
         for name in self.list_datasets():
             roots.extend(self.versions.live_digests(name))
+        roots.extend(derivation_gc_roots(self.store))
         return self.store.gc(roots)

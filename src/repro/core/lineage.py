@@ -31,6 +31,7 @@ class NodeKind:
     SNAPSHOT = "snapshot"
     WORKFLOW_RUN = "workflow_run"
     COMPONENT_RUN = "component_run"
+    DERIVATION = "derivation"
     CHECKPOINT = "checkpoint"
     EXTERNAL = "external"
     RECORD = "record"
@@ -59,16 +60,30 @@ class LineageEdge:
     dst: str
     kind: str
     timestamp: float = 0.0
+    meta: Mapping[str, object] = field(default_factory=dict)
 
     def to_json(self) -> dict:
-        return {"src": self.src, "dst": self.dst, "kind": self.kind,
-                "ts": self.timestamp}
+        out = {"src": self.src, "dst": self.dst, "kind": self.kind,
+               "ts": self.timestamp}
+        if self.meta:
+            out["meta"] = dict(self.meta)
+        return out
 
 
 class LineageGraph:
-    """In-memory adjacency with write-through persistence."""
+    """In-memory adjacency with write-through persistence.
+
+    Persistence is a *segmented* append-only log: each :meth:`flush`
+    writes only the dirty delta as a new ``lineage/seg/<n>`` metadata
+    entry — O(new nodes/edges), not O(graph) — and :meth:`_load` replays
+    the base log plus every segment, compacting them back into the base
+    once enough accumulate.  (The pre-segment format — everything under
+    ``lineage/log`` — still loads and becomes the compaction base.)
+    """
 
     _KEY = "lineage/log"
+    _SEG_PREFIX = "lineage/seg/"
+    _COMPACT_AT = 64
 
     def __init__(self, store: Optional[ObjectStore] = None):
         self.store = store
@@ -76,28 +91,54 @@ class LineageGraph:
         self._out: Dict[str, List[LineageEdge]] = {}
         self._in: Dict[str, List[LineageEdge]] = {}
         self._log: List[dict] = []
+        self._next_seg = 0
         self._load()
 
     # -- persistence -------------------------------------------------------------
 
+    def _index_item(self, item: dict) -> None:
+        if item["t"] == "node":
+            self._index_node(
+                LineageNode(item["id"], item["kind"], item.get("meta", {})))
+        else:
+            self._index_edge(
+                LineageEdge(item["src"], item["dst"], item["kind"],
+                            item.get("ts", 0.0), item.get("meta", {})))
+
+    def _seg_key(self, seq: int) -> str:
+        return f"{self._SEG_PREFIX}{seq:08d}"
+
     def _load(self) -> None:
         if self.store is None:
             return
-        for item in self.store.get_meta(self._KEY, default=[]):
-            if item["t"] == "node":
-                n = LineageNode(item["id"], item["kind"], item.get("meta", {}))
-                self._index_node(n)
-            else:
-                e = LineageEdge(item["src"], item["dst"], item["kind"],
-                                item.get("ts", 0.0))
-                self._index_edge(e)
+        items = list(self.store.get_meta(self._KEY, default=[]))
+        seg_names = sorted(self.store.list_meta(self._SEG_PREFIX))
+        for name in seg_names:
+            items.extend(self.store.get_meta(name, default=[]))
+        for item in items:
+            self._index_item(item)
+        if len(seg_names) >= self._COMPACT_AT:
+            # Compact: fold every segment into the base log so the replay
+            # list stays bounded; the delta-append invariant is per-flush.
+            self.store.put_meta(self._KEY, items)
+            for name in seg_names:
+                self.store.delete_meta(name)
+            seg_names = []
+        self._next_seg = (
+            int(seg_names[-1][len(self._SEG_PREFIX):]) + 1 if seg_names
+            else 0)
 
     def flush(self) -> None:
+        """Persist pending mutations as one delta segment (O(delta))."""
         if self.store is None or not self._log:
             return
-        existing = self.store.get_meta(self._KEY, default=[])
-        existing.extend(self._log)
-        self.store.put_meta(self._KEY, existing)
+        seq = self._next_seg
+        # Another process may have appended since we loaded; probe forward
+        # so we extend the log instead of overwriting their segment.
+        while self.store.get_meta(self._seg_key(seq)) is not None:
+            seq += 1
+        self.store.put_meta(self._seg_key(seq), self._log)
+        self._next_seg = seq + 1
         self._log.clear()
 
     # -- mutation -------------------------------------------------------------------
@@ -115,8 +156,8 @@ class LineageGraph:
         self._log.append({"t": "node", **node.to_json()})
         return node
 
-    def add_edge(self, src: str, dst: str, kind: str) -> LineageEdge:
-        edge = LineageEdge(src, dst, kind, time.time())
+    def add_edge(self, src: str, dst: str, kind: str, **meta) -> LineageEdge:
+        edge = LineageEdge(src, dst, kind, time.time(), meta)
         self._index_edge(edge)
         self._log.append({"t": "edge", **edge.to_json()})
         return edge

@@ -24,7 +24,7 @@ import uuid
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, Iterator, List, Mapping,
-                    Optional, Sequence, Union)
+                    Optional, Sequence, Tuple, Union)
 
 from .dataset import Record, Snapshot
 
@@ -44,9 +44,17 @@ __all__ = [
 
 
 class Component(ABC):
-    """One processing unit in a pipeline (a gray block in Fig. 1)."""
+    """One processing unit in a pipeline (a gray block in Fig. 1).
+
+    ``per_record`` declares that :meth:`process` maps each input record to
+    its outputs independently of every other record (no cross-record
+    state).  The derivation engine may then recompute only changed records
+    on a re-run, reusing prior outputs for the rest; stages that batch,
+    dedup, or wait on humans must leave it ``False``.
+    """
 
     name: str = "component"
+    per_record: bool = False
 
     def __init__(self, name: Optional[str] = None, **config) -> None:
         if name is not None:
@@ -107,6 +115,8 @@ class ProgramComponent(Component):
 class MapComponent(Component):
     """record -> record."""
 
+    per_record = True
+
     def __init__(self, fn: Callable[[Record], Record], name: Optional[str] = None,
                  **config) -> None:
         super().__init__(name=name or f"map:{fn.__name__}", **config)
@@ -123,6 +133,8 @@ class MapComponent(Component):
 class FilterComponent(Component):
     """record -> keep?"""
 
+    per_record = True
+
     def __init__(self, pred: Callable[[Record], bool], name: Optional[str] = None,
                  **config) -> None:
         super().__init__(name=name or f"filter:{pred.__name__}", **config)
@@ -138,6 +150,8 @@ class FilterComponent(Component):
 
 class FlatMapComponent(Component):
     """record -> 0..n records (splitting documents, augmentation...)."""
+
+    per_record = True
 
     def __init__(self, fn: Callable[[Record], Iterable[Record]],
                  name: Optional[str] = None, **config) -> None:
@@ -289,6 +303,22 @@ class Pipeline:
         for c in self.components:
             h.update(c.fingerprint().encode())
         return h.hexdigest()[:16]
+
+    def split_incremental(self) -> Tuple[List[Component], List[Component]]:
+        """Split into (per-record prefix, suffix).
+
+        The prefix is the maximal leading run of ``per_record`` components
+        — safe for record-level incremental recompute and sharded
+        streaming.  The first stateful stage (batch / human / stream)
+        starts the suffix, which the derivation engine always recomputes
+        in full over the combined prefix outputs.
+        """
+        n = 0
+        for c in self.components:
+            if not c.per_record:
+                break
+            n += 1
+        return list(self.components[:n]), list(self.components[n:])
 
     def run(self, records: Union[Snapshot, Iterable[Record]],
             ctx: Optional[RunContext] = None) -> List[Record]:

@@ -29,6 +29,7 @@ __all__ = [
     "VersionDiff",
     "MergeConflict",
     "VersionStore",
+    "raw_entry_matches",
 ]
 
 
@@ -445,6 +446,19 @@ class VersionStore:
             for e in self.get_manifest(c.tree).entries():
                 out.append(e.blob.digest)
         return out
+
+
+def raw_entry_matches(raw: dict, entry: RecordEntry) -> bool:
+    """True iff a raw manifest record denotes the same content as ``entry``.
+
+    Covers payload digest AND attrs: components and queries both see
+    attrs, so a version diff (payload digests only) is not a sufficient
+    "unchanged" witness for derivation reuse — a record whose attrs
+    changed must recompute even though :func:`diff_manifests` reports it
+    unchanged.
+    """
+    return (raw["blob"]["digest"] == entry.blob.digest
+            and raw.get("attrs", {}) == entry.attrs)
 
 
 def diff_manifests(ma: Manifest, mb: Manifest) -> VersionDiff:

@@ -11,15 +11,18 @@ by time schedule.
 
 Execution model
 ---------------
-A run checks out the workflow's input query, splits the records into
-``n_shards`` shards, and executes the pipeline per-shard on a bounded worker
-pool (the "allocated resources").  Shards that fail are retried with
-exponential backoff; shards that straggle beyond ``speculative_factor`` × the
-median completed-shard duration get a **speculative duplicate** launched
-(MapReduce backup tasks) — first finisher wins, results are deterministic
-because components are deterministic.  Runs that hit a
-:class:`~repro.core.transforms.WaitingForHuman` park in ``WAITING_HUMAN`` and
-resume via :meth:`WorkflowManager.resume`.
+A run builds the workflow's input :class:`~repro.core.dataset.CheckoutPlan`
+and hands it to the :class:`~repro.core.derive.DerivationEngine`, which
+owns sharded streaming execution (bounded batched payload reads), retries
+with exponential backoff, speculative duplicates for stragglers (MapReduce
+backup tasks — first finisher wins, sound because components are
+deterministic), and the derivation cache: a re-run on an identical
+(commit, query, pipeline) triple succeeds instantly with the cached output
+commit, and a re-run on changed input recomputes only the changed records
+for per-record stages.  Runs that hit a
+:class:`~repro.core.transforms.WaitingForHuman` park in ``WAITING_HUMAN``
+and resume via :meth:`WorkflowManager.resume` (completed per-record work
+is reused from the engine's prefix memo, not re-run).
 """
 
 from __future__ import annotations
@@ -28,13 +31,13 @@ import threading
 import time
 import traceback
 import uuid
-from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
-from .dataset import DatasetManager, Record, Snapshot, version_node_id
+from .dataset import DatasetManager, Record
+from .derive import DerivationEngine, ExecPolicy, ShardReport
 from .lineage import EdgeKind, NodeKind
-from .transforms import Pipeline, RunContext, WaitingForHuman
+from .transforms import Pipeline, WaitingForHuman
 from .versioning import Commit
 
 __all__ = ["Workflow", "WorkflowRun", "RunState", "WorkflowManager",
@@ -84,17 +87,6 @@ class Workflow:
 
 
 @dataclass
-class ShardReport:
-    shard: int
-    attempts: int = 0
-    speculative: bool = False
-    duration_s: float = 0.0
-    n_in: int = 0
-    n_out: int = 0
-    error: str = ""
-
-
-@dataclass
 class WorkflowRun:
     run_id: str
     workflow: str
@@ -109,6 +101,9 @@ class WorkflowRun:
     waiting_task: Optional[str] = None
     error: str = ""
     trigger: str = "manual"
+    derivation_key: Optional[str] = None
+    cache_hit: bool = False
+    n_outputs: int = 0
 
     def report(self) -> dict:
         """The paper's "reports results"."""
@@ -120,7 +115,9 @@ class WorkflowRun:
             "duration_s": max(0.0, self.finished_at - self.started_at),
             "input_commit": self.input_commit,
             "output_commit": self.output_commit,
-            "n_output_records": len(self.output_records),
+            "derivation_key": self.derivation_key,
+            "cache_hit": self.cache_hit,
+            "n_output_records": max(self.n_outputs, len(self.output_records)),
             "shards": [
                 {"shard": s.shard, "attempts": s.attempts,
                  "speculative": s.speculative, "duration_s": round(s.duration_s, 6),
@@ -137,6 +134,10 @@ class WorkflowManager:
     def __init__(self, dm: DatasetManager, worker_slots: int = 8):
         self.dm = dm
         self.worker_slots = worker_slots
+        # Runs execute on the shared derivation engine (cache + incremental
+        # recompute + streaming shards); one per manager, like this class.
+        self.engine = DerivationEngine.for_manager(dm,
+                                                   worker_slots=worker_slots)
         self._workflows: Dict[str, Workflow] = {}
         self._runs: Dict[str, WorkflowRun] = {}
         self._parked: Dict[str, Tuple[Workflow, WorkflowRun]] = {}
@@ -225,6 +226,14 @@ class WorkflowManager:
         self._execute(wf, run)
         return run
 
+    def _policy(self, wf: Workflow) -> ExecPolicy:
+        return ExecPolicy(
+            n_shards=wf.n_shards,
+            max_retries=wf.max_retries,
+            speculative_factor=wf.speculative_factor,
+            min_speculative_wait_s=wf.min_speculative_wait_s,
+        )
+
     def _execute(self, wf: Workflow, run: WorkflowRun) -> None:
         run.state = RunState.RUNNING
         run.started_at = time.time()
@@ -247,18 +256,35 @@ class WorkflowManager:
             lineage.add_edge(snap.snapshot_id, run_node, EdgeKind.INPUT_TO)
             lineage.flush()
 
-            outputs = self._run_sharded(wf, run, snap)
-
-            run.output_records = outputs
-            if wf.output_dataset is not None:
-                commit = self.dm.check_in(
-                    wf.output_dataset, outputs, wf.actor,
-                    message=wf.output_message or f"output of {wf.name}",
-                    derived_from=[snap.snapshot_id],
-                    produced_by=run_node,
-                    meta={"_workflow_output": wf.name, "run_id": run.run_id},
-                )
-                run.output_commit = commit.commit_id
+            result = self.engine.derive(
+                plan, wf.pipeline,
+                output_dataset=wf.output_dataset,
+                actor=wf.actor,
+                message=wf.output_message or f"output of {wf.name}",
+                policy=self._policy(wf),
+                derived_from=[snap.snapshot_id],
+                produced_by=run_node,
+                commit_meta={"_workflow_output": wf.name,
+                             "run_id": run.run_id},
+                run_id=run.run_id,
+            )
+            run.derivation_key = result.key
+            run.cache_hit = result.cache_hit
+            run.n_outputs = result.n_outputs
+            run.shard_reports = result.shard_reports
+            # Keep the WorkflowRun contract: every executed run exposes
+            # its output records (incremental runs fetch reused payloads
+            # from the output commit).  Cache-hit runs did no work and
+            # stay lazy — read the cached version via checkout instead.
+            run.output_records = ([] if result.cache_hit
+                                  else self.engine.load_output_records(result))
+            run.output_commit = result.output_commit
+            if result.cache_hit:
+                # The run did no work: its result *is* the cached
+                # derivation.  Annotate provenance accordingly.
+                lineage.add_edge(run_node, result.node_id,
+                                 EdgeKind.DERIVED_FROM, cache_hit=True)
+                lineage.flush()
             run.state = RunState.SUCCEEDED
         except WaitingForHuman as wfh:
             run.state = RunState.WAITING_HUMAN
@@ -269,88 +295,3 @@ class WorkflowManager:
             run.error = f"{type(e).__name__}: {e}\n{traceback.format_exc(limit=4)}"
         finally:
             run.finished_at = time.time()
-
-    # -- sharded, fault-tolerant, straggler-mitigated pipeline execution -------
-
-    def _run_sharded(self, wf: Workflow, run: WorkflowRun,
-                     snap: Snapshot) -> List[Record]:
-        entries = snap.entries()
-        n_shards = max(1, min(wf.n_shards, len(entries) or 1))
-        shards: List[List[Record]] = [[] for _ in range(n_shards)]
-        for i, e in enumerate(entries):
-            shards[i % n_shards].append(
-                Record(e.record_id, snap.read(e.record_id), dict(e.attrs)))
-
-        results: Dict[int, List[Record]] = {}
-        reports = {i: ShardReport(shard=i, n_in=len(shards[i]))
-                   for i in range(n_shards)}
-        durations: List[float] = []
-
-        def work(shard_idx: int, speculative: bool) -> Tuple[int, List[Record], float, bool]:
-            t0 = time.time()
-            ctx = RunContext(run_id=run.run_id, shard_index=shard_idx,
-                             n_shards=n_shards)
-            out = wf.pipeline.run(shards[shard_idx], ctx)
-            return shard_idx, out, time.time() - t0, speculative
-
-        with ThreadPoolExecutor(max_workers=self.worker_slots) as pool:
-            pending: Dict[Future, Tuple[int, bool]] = {}
-            attempts = {i: 0 for i in range(n_shards)}
-            launched_spec = set()
-            launch_times: Dict[int, float] = {}
-
-            def launch(i: int, speculative: bool = False):
-                attempts[i] += 1
-                reports[i].attempts += 1
-                launch_times.setdefault(i, time.time())
-                fut = pool.submit(work, i, speculative)
-                pending[fut] = (i, speculative)
-
-            for i in range(n_shards):
-                launch(i)
-
-            while pending:
-                done, _ = wait(list(pending), timeout=wf.min_speculative_wait_s,
-                               return_when=FIRST_COMPLETED)
-                for fut in done:
-                    i, speculative = pending.pop(fut)
-                    if i in results:
-                        continue  # a duplicate already won
-                    try:
-                        idx, out, dt, spec = fut.result()
-                    except WaitingForHuman:
-                        raise
-                    except Exception as e:  # noqa: BLE001
-                        reports[i].error = f"{type(e).__name__}: {e}"
-                        if attempts[i] <= wf.max_retries:
-                            time.sleep(0.01 * (2 ** (attempts[i] - 1)))
-                            launch(i)
-                        else:
-                            raise RuntimeError(
-                                f"shard {i} failed after {attempts[i]} attempts: "
-                                f"{reports[i].error}") from e
-                        continue
-                    results[idx] = out
-                    durations.append(dt)
-                    reports[idx].duration_s = dt
-                    reports[idx].n_out = len(out)
-                    reports[idx].speculative = spec
-
-                # Straggler mitigation: speculative duplicates.
-                if durations and len(results) < n_shards:
-                    med = sorted(durations)[len(durations) // 2]
-                    now = time.time()
-                    for i in range(n_shards):
-                        if (i not in results and i not in launched_spec
-                                and attempts[i] > 0
-                                and now - launch_times.get(i, now)
-                                > max(wf.speculative_factor * med,
-                                      wf.min_speculative_wait_s)):
-                            launched_spec.add(i)
-                            launch(i, speculative=True)
-
-        run.shard_reports = [reports[i] for i in range(n_shards)]
-        out: List[Record] = []
-        for i in range(n_shards):
-            out.extend(results[i])
-        return out

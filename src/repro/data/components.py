@@ -54,6 +54,8 @@ class ByteTokenizer:
 class TokenizeComponent(Component):
     """text record -> token-array record (.npy payload)."""
 
+    per_record = True  # record-wise + deterministic: incremental-safe
+
     def __init__(self, tokenizer: Optional[ByteTokenizer] = None,
                  name: str = "tokenize") -> None:
         super().__init__(name=name)
@@ -134,6 +136,8 @@ class PackComponent(Component):
 class SplitComponent(Component):
     """Deterministically assign split attrs by record-id hash."""
 
+    per_record = True
+
     def __init__(self, eval_fraction: float = 0.05, name: str = "split"):
         super().__init__(name=name, eval_fraction=eval_fraction)
         self.eval_fraction = eval_fraction
@@ -164,6 +168,8 @@ class DedupComponent(Component):
 
 
 class LengthFilterComponent(Component):
+    per_record = True
+
     def __init__(self, min_bytes: int = 1, max_bytes: int = 1 << 20,
                  name: str = "length_filter"):
         super().__init__(name=name, min_bytes=min_bytes, max_bytes=max_bytes)

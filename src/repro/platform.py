@@ -28,6 +28,7 @@ from typing import Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 from .core.acl import AccessController
 from .core.dataset import (CheckoutPlan, DatasetManager, Record, Snapshot,
                            version_node_id)
+from .core.derive import DerivationResult, ExecPolicy
 from .core.lineage import LineageGraph
 from .core.revocation import RevocationEngine, RevocationReport
 from .core.store import (FileBackend, MemoryBackend, ObjectStore,
@@ -50,6 +51,7 @@ class Platform:
     - ``lineage``    — provenance graph
     - ``revocation`` — GDPR-delete engine
     - ``workflows``  — workflow manager (triggers, sharded runs)
+    - ``derivations``— derivation engine (cached/incremental transforms)
     """
 
     def __init__(
@@ -73,6 +75,9 @@ class Platform:
         existing = getattr(manager, "_workflow_manager", None)
         self.workflows = existing if existing is not None else \
             WorkflowManager(manager, worker_slots=worker_slots)
+        # The workflow manager created (or found) the shared derivation
+        # engine for this manager; surface it as a first-class subsystem.
+        self.derivations = self.workflows.engine
 
     # ------------------------------------------------------------------ open
 
@@ -292,6 +297,32 @@ class DatasetHandle:
         plan = self.plan(rev=rev, where=where, attrs_equal=attrs_equal,
                          limit=limit, actor=actor)
         return plan.snapshot(register=register_snapshot)
+
+    def derive(
+        self,
+        pipeline,
+        output: Optional[str] = None,
+        rev: str = "main",
+        where=None,
+        actor: Optional[str] = None,
+        message: str = "",
+        policy: Optional[ExecPolicy] = None,
+        **kwargs,
+    ) -> DerivationResult:
+        """Run ``pipeline`` over (a queried subset of) this dataset and
+        check the result into ``output`` — cached, incremental, streaming.
+
+        The derivation is identified by (input commit, query fingerprint,
+        pipeline fingerprint): an identical call — from any process over
+        the same backend — returns the cached output commit with zero
+        component executions, and a call against a new input commit
+        recomputes only changed records for per-record stages.
+        """
+        plan = self.plan(rev=rev, where=where, actor=actor)
+        return self._plat.derivations.derive(
+            plan, pipeline, output_dataset=output,
+            actor=self._actor(actor), message=message, policy=policy,
+            **kwargs)
 
     def read(self, record_id: str, rev: str = "main",
              actor: Optional[str] = None) -> bytes:

@@ -1,0 +1,649 @@
+"""Derivation engine tests: content-addressed caching (cross-process),
+incremental recompute, streaming sharded execution, failure-path future
+cancellation, lineage derivation nodes, delta lineage flush, gc roots,
+and the CLI ``derive`` subcommand."""
+
+import time
+
+import pytest
+
+from repro.cli import main as cli_main
+from repro.core import (BatchComponent, HumanTask, HumanTaskQueue,
+                        LineageGraph, MemoryBackend, ObjectStore, Pipeline,
+                        Record, RunState, Workflow, component,
+                        register_pipeline)
+from repro.core.derive import _PIPELINES, ExecPolicy
+from repro.core.lineage import NodeKind
+from repro.platform import Platform
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    saved = dict(_PIPELINES)
+    yield
+    _PIPELINES.clear()
+    _PIPELINES.update(saved)
+
+
+def seed_records(n=12, prefix="r", salt=""):
+    return [Record(f"{prefix}{i:02d}", f"payload {salt}{i}".encode(),
+                   {"i": i, "lang": "en" if i % 3 else "fr"})
+            for i in range(n)]
+
+
+def counting_pipeline(counter, name="clean"):
+    """map + filter chain with stable fingerprints (names fix identity)."""
+
+    @component(kind="map", name="enrich")
+    def enrich(rec):
+        counter["map"] += 1
+        return Record(rec.record_id, rec.data + b"!",
+                      {**rec.attrs, "enriched": True})
+
+    @component(kind="filter", name="keep_even")
+    def keep_even(rec):
+        counter["filter"] += 1
+        return rec.attrs.get("i", 0) % 2 == 0
+
+    return Pipeline([enrich, keep_even], name=name)
+
+
+def flatmap_pipeline(counter):
+    @component(kind="flatmap", name="explode")
+    def explode(rec):
+        counter["flatmap"] += 1
+        return [Record(f"{rec.record_id}:a", rec.data + b"A", dict(rec.attrs)),
+                Record(f"{rec.record_id}:b", rec.data + b"B", dict(rec.attrs))]
+
+    return Pipeline([explode], name="fanout")
+
+
+# ---------------------------------------------------------------------------
+# Cache matrix
+# ---------------------------------------------------------------------------
+
+
+def test_identical_derivation_dedupes_across_processes(tmp_path):
+    repo = str(tmp_path / "repo")
+    cnt1 = {"map": 0, "filter": 0}
+    plat1 = Platform.open(repo, actor="p1")
+    plat1.dataset("src").check_in(seed_records(), message="v1")
+    r1 = plat1.dataset("src").derive(counting_pipeline(cnt1), output="out")
+    assert not r1.cache_hit and r1.key is not None
+    assert r1.n_executed == 12 and cnt1["map"] == 12
+
+    # A second process over the same backend: same triple short-circuits
+    # to the cached output commit with zero component executions.
+    cnt2 = {"map": 0, "filter": 0}
+    plat2 = Platform.open(repo, actor="p2")
+    r2 = plat2.dataset("src").derive(counting_pipeline(cnt2), output="out")
+    assert r2.cache_hit
+    assert r2.key == r1.key
+    assert r2.output_commit == r1.output_commit
+    assert cnt2["map"] == 0 and cnt2["filter"] == 0
+
+
+def test_changed_query_pipeline_or_commit_each_miss():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+
+    r_base = ds.derive(pipe, output="out")
+    assert not r_base.cache_hit
+
+    # different query -> different key -> miss
+    r_q = ds.derive(pipe, output="out", where="lang=en")
+    assert not r_q.cache_hit and r_q.key != r_base.key
+
+    # different pipeline (different component name => fingerprint) -> miss
+    cnt2 = {"map": 0, "filter": 0}
+
+    @component(kind="map", name="enrich_v2")
+    def enrich_v2(rec):
+        cnt2["map"] += 1
+        return rec
+
+    r_p = ds.derive(Pipeline([enrich_v2], name="other"), output="out")
+    assert not r_p.cache_hit and r_p.key != r_base.key
+
+    # new input commit -> miss (handled incrementally, but never a hit)
+    ds.check_in([Record("r00", b"changed", {"i": 0, "lang": "fr"})],
+                message="v2")
+    r_c = ds.derive(pipe, output="out")
+    assert not r_c.cache_hit and r_c.key != r_base.key
+
+    # The intervening derivations moved the output head, so the original
+    # triple recomputes (the cached commit is no longer the materialized
+    # view) — deterministically reproducing the same content.
+    r_again = ds.derive(pipe, output="out", rev=r_base.input_commit)
+    assert not r_again.cache_hit
+    assert r_again.content_digest == r_base.content_digest
+
+
+def test_one_triple_two_output_datasets_cache_independently():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    ra = ds.derive(pipe, output="view_a")
+    rb = ds.derive(pipe, output="view_b")
+    assert ra.key == rb.key  # same triple, same derivation identity
+    assert not rb.cache_hit  # different output dataset: not the A slot
+    assert rb.output_commit != ra.output_commit  # separate views
+    # the B derivation reused A's prefix results via the in-process memo
+    assert cnt["map"] == 12
+    # both slots live side by side — each re-derive is a hit
+    assert ds.derive(pipe, output="view_a").cache_hit
+    assert ds.derive(pipe, output="view_b").cache_hit
+    assert cnt["map"] == 12  # still zero further executions
+
+
+def test_cache_hit_requires_head_to_match_cached_view():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(6), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    r1 = ds.derive(pipe, output="out")
+    # someone commits directly to the derived dataset -> view diverges
+    plat.dataset("out").check_in([Record("intruder", b"x", {})],
+                                 message="manual")
+    r2 = ds.derive(pipe, output="out")
+    assert not r2.cache_hit  # stale view: recompute, don't serve r1
+    # the recompute restored materialized-view semantics at the head
+    head = plat.versions.get_branch("out", "main")
+    assert head == r2.output_commit
+    man = plat.versions.get_manifest(plat.versions.get_commit(head).tree)
+    assert "intruder" not in man
+    assert r2.content_digest == r1.content_digest
+    # and with the view restored, the triple hits again
+    assert ds.derive(pipe, output="out").cache_hit
+
+
+def test_opaque_query_is_never_cached():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    opaque = lambda e: True  # noqa: E731 - deliberately a bare callable
+    r1 = ds.derive(pipe, output="out", where=opaque)
+    assert r1.key is None and not r1.cache_hit
+    r2 = ds.derive(pipe, output="out", where=opaque)
+    assert r2.key is None and not r2.cache_hit
+    assert cnt["map"] == 24  # executed both times
+
+
+# ---------------------------------------------------------------------------
+# Incremental recompute
+# ---------------------------------------------------------------------------
+
+
+def _delta_v2(ds):
+    """modify r00+r05, add r99, delete r03 -> 3 changed of 12 records."""
+    ds.check_in(
+        [Record("r00", b"new payload 0", {"i": 0, "lang": "fr"}),
+         Record("r05", b"new payload 5", {"i": 5, "lang": "en"}),
+         Record("r99", b"payload 99", {"i": 99, "lang": "en"})],
+        remove_ids=["r03"], message="v2")
+
+
+def test_incremental_rerun_is_bit_identical_to_cold():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    ds.derive(pipe, output="out")
+    assert cnt["map"] == 12
+
+    _delta_v2(ds)
+    r_inc = ds.derive(pipe, output="out")
+    assert r_inc.incremental and not r_inc.cache_hit
+    assert r_inc.n_executed == 3          # r00, r05 modified + r99 added
+    assert r_inc.n_reused == 9            # 12 - 2 modified - 1 removed
+    assert cnt["map"] == 15               # only the changed subset ran
+
+    # Cold full recompute of the same input, bypassing every cache.
+    r_cold = ds.derive(pipe, output="out_cold", use_cache=False,
+                       incremental=False, update_cache=False)
+    assert r_cold.n_executed == 12
+    assert r_inc.content_digest == r_cold.content_digest
+
+    # Deletion propagated: r03's output is not in the derived version.
+    man = plat.versions.get_manifest(
+        plat.versions.get_commit(r_inc.output_commit).tree)
+    assert "r03" not in man and "r99" not in man  # r99 has odd i -> filtered
+    assert "r00" in man
+
+
+def test_incremental_flatmap_fanout_and_deletion():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(8), message="v1")
+    cnt = {"flatmap": 0}
+    pipe = flatmap_pipeline(cnt)
+    ds.derive(pipe, output="fan")
+    assert cnt["flatmap"] == 8
+
+    ds.check_in([Record("r01", b"changed", {"i": 1, "lang": "en"})],
+                remove_ids=["r02"], message="v2")
+    r_inc = ds.derive(pipe, output="fan")
+    assert r_inc.incremental and r_inc.n_executed == 1
+    assert cnt["flatmap"] == 9
+    r_cold = ds.derive(pipe, output="fan_cold", use_cache=False,
+                       incremental=False, update_cache=False)
+    assert r_inc.content_digest == r_cold.content_digest
+    man = plat.versions.get_manifest(
+        plat.versions.get_commit(r_inc.output_commit).tree)
+    assert "r02:a" not in man and "r02:b" not in man
+    assert "r01:a" in man and len(man) == 14
+
+
+def test_attrs_only_change_recomputes_record():
+    """A version diff sees payload digests only; reuse identity must also
+    cover attrs (components and queries read them)."""
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(6), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    ds.derive(pipe, output="out")
+    # same payload for r04, different attrs
+    ds.check_in([Record("r04", b"payload 4", {"i": 4, "lang": "de"})],
+                message="v2")
+    r = ds.derive(pipe, output="out")
+    assert r.n_executed == 1 and r.n_reused == 5
+
+
+def test_batch_suffix_forces_full_recompute_of_suffix():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(10), message="v1")
+    seen = {"map": 0, "batch_in": 0}
+
+    @component(kind="map", name="pfx")
+    def pfx(rec):
+        seen["map"] += 1
+        return rec
+
+    def renumber(batch):
+        seen["batch_in"] += len(batch)
+        return [Record(f"g{i}-{r.record_id}", r.data, dict(r.attrs))
+                for i, r in enumerate(batch)]
+
+    pipe = Pipeline([pfx, BatchComponent(renumber, batch_size=4,
+                                         name="renumber")], name="batched")
+    ds.derive(pipe, output="out")
+    assert seen["map"] == 10 and seen["batch_in"] == 10
+
+    ds.check_in([Record("r01", b"changed", {"i": 1, "lang": "en"})],
+                message="v2")
+    r = ds.derive(pipe, output="out")
+    # prefix incremental (1 executed), suffix fully recomputed (all 10)
+    assert r.n_executed == 1 and r.n_reused == 9
+    assert seen["map"] == 11 and seen["batch_in"] == 20
+    r_cold = ds.derive(pipe, output="out_cold", use_cache=False,
+                       incremental=False, update_cache=False)
+    assert r.content_digest == r_cold.content_digest
+
+
+def test_waiting_human_resume_reuses_prefix_results():
+    dm = Platform.open(actor="t").manager
+    wm = dm._workflow_manager
+    dm.check_in("raw", seed_records(5), actor="ingest")
+    cnt = {"map": 0}
+
+    @component(kind="map", name="pre_label")
+    def pre_label(rec):
+        cnt["map"] += 1
+        return rec
+
+    q = HumanTaskQueue()
+    wm.register(Workflow(
+        name="label",
+        pipeline=Pipeline([pre_label,
+                           HumanTask(q, task_id="batch-1", name="labeling")]),
+        input_dataset="raw", output_dataset="labeled", n_shards=2))
+    run = wm.run("label")
+    assert run.state == RunState.WAITING_HUMAN
+    assert cnt["map"] == 5
+    for rec in q.pending("batch-1"):
+        q.complete("batch-1", rec.record_id, rec.data + b" [ok]", label="ok")
+    run2 = wm.resume(run.run_id)
+    assert run2.state == RunState.SUCCEEDED, run2.error
+    # the resume reused the parked prefix results: no re-execution
+    assert cnt["map"] == 5
+    snap = dm.checkout("labeled", actor="x")
+    assert len(snap) == 5 and snap.attrs("r00")["label"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Failure path: poisoned shard cancels queued work
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_shard_cancels_pending_shards():
+    # One worker slot: shards queue behind each other, so the poisoned
+    # first shard must cancel the slow ones before they ever start.
+    # 120 records keeps the run on the pooled path (not the inline
+    # single-window fast path).
+    dm2 = Platform.open(actor="t", worker_slots=1).manager
+    wm = dm2._workflow_manager
+    dm2.check_in("raw",
+                 [Record(f"x{i:03d}", b"p", {"i": i}) for i in range(120)],
+                 actor="ingest")
+    slow = {"calls": 0}
+
+    @component(kind="map", name="poison_or_sleep")
+    def poison_or_sleep(rec):
+        if rec.record_id == "x000":
+            raise ValueError("poisoned")
+        slow["calls"] += 1
+        time.sleep(0.01)
+        return rec
+
+    wm.register(Workflow(name="doomed",
+                         pipeline=Pipeline([poison_or_sleep]),
+                         input_dataset="raw", n_shards=3, max_retries=0))
+    t0 = time.time()
+    run = wm.run("doomed")
+    elapsed = time.time() - t0
+    assert run.state == RunState.FAILED
+    assert "shard 0 failed" in run.error
+    # queued shards were cancelled, not executed to completion
+    assert slow["calls"] == 0
+    assert elapsed < 1.0
+
+
+def test_straggler_speculation_on_pool_path():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(8), message="v1")
+    slow_once = {"done": False}
+
+    @component(kind="map", name="slowpoke2")
+    def slowpoke2(rec):
+        if rec.record_id == "r01" and not slow_once["done"]:
+            slow_once["done"] = True
+            time.sleep(0.6)
+        return rec
+
+    # batch_records=1 forces the pooled path even for 8 records
+    r = ds.derive(Pipeline([slowpoke2], name="slow"), output="out",
+                  policy=ExecPolicy(n_shards=4, batch_records=1,
+                                    speculative_factor=2.0,
+                                    min_speculative_wait_s=0.02))
+    assert r.output_commit is not None
+    assert any(s.attempts > 1 for s in r.shard_reports)  # duplicate launched
+    man = plat.versions.get_manifest(
+        plat.versions.get_commit(r.output_commit).tree)
+    assert len(man) == 8  # no duplicate outputs from speculation
+
+
+def test_retry_then_success_still_works():
+    plat = Platform.open(actor="t")
+    dm = plat.manager
+    dm.check_in("raw", seed_records(6), actor="ingest")
+    calls = {"n": 0}
+
+    @component(kind="map", name="flaky2")
+    def flaky2(rec):
+        calls["n"] += 1
+        if rec.record_id == "r00" and calls["n"] < 3:
+            raise ValueError("transient")
+        return rec
+
+    wm = dm._workflow_manager
+    wm.register(Workflow(name="flaky2", pipeline=Pipeline([flaky2]),
+                         input_dataset="raw", n_shards=2, max_retries=3))
+    run = wm.run("flaky2")
+    assert run.state == RunState.SUCCEEDED, run.error
+    assert len(run.output_records) == 6
+    assert any(s.attempts > 1 for s in run.shard_reports)
+
+
+# ---------------------------------------------------------------------------
+# Lineage
+# ---------------------------------------------------------------------------
+
+
+def test_derivation_node_explains_output_ancestry():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    c_in = ds.check_in(seed_records(4), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    r = ds.derive(counting_pipeline(cnt), output="out")
+    from repro.core.dataset import version_node_id
+
+    dnode = f"derivation:{r.key}"
+    node = plat.lineage.node(dnode)
+    assert node is not None and node.kind == NodeKind.DERIVATION
+    assert node.meta["input_commit"] == c_in.commit_id
+    anc = plat.ancestors(version_node_id("out", r.output_commit))
+    assert dnode in anc
+    assert version_node_id("src", c_in.commit_id) in anc
+
+
+def test_workflow_cache_hit_annotated_in_lineage():
+    plat = Platform.open(actor="t")
+    dm = plat.manager
+    dm.check_in("raw", seed_records(4), actor="ingest")
+    cnt = {"map": 0, "filter": 0}
+    wm = dm._workflow_manager
+    wm.register(Workflow(name="wf", pipeline=counting_pipeline(cnt),
+                         input_dataset="raw", output_dataset="clean"))
+    run1 = wm.run("wf")
+    assert run1.state == RunState.SUCCEEDED and not run1.cache_hit
+    run2 = wm.run("wf")
+    assert run2.state == RunState.SUCCEEDED, run2.error
+    assert run2.cache_hit and run2.output_commit == run1.output_commit
+    assert cnt["map"] == 4  # second run executed nothing
+    edges = plat.lineage.edges_out(f"workflow_run:{run2.run_id}")
+    hit_edges = [e for e in edges if e.meta.get("cache_hit")]
+    assert hit_edges and hit_edges[0].dst == f"derivation:{run2.derivation_key}"
+    assert run2.report()["cache_hit"] is True
+
+
+def test_incremental_workflow_rerun_exposes_output_records():
+    plat = Platform.open(actor="t")
+    dm = plat.manager
+    dm.check_in("raw", seed_records(6), actor="ingest")
+    cnt = {"map": 0, "filter": 0}
+    wm = dm._workflow_manager
+    wm.register(Workflow(name="wf2", pipeline=counting_pipeline(cnt),
+                         input_dataset="raw", output_dataset="clean2"))
+    run1 = wm.run("wf2")
+    n1 = len(run1.output_records)
+    assert n1 == 3  # even i only
+    dm.check_in("raw", [Record("r05", b"changed", {"i": 4, "lang": "en"})],
+                actor="ingest", message="delta")
+    run2 = wm.run("wf2")
+    assert run2.state == RunState.SUCCEEDED, run2.error
+    assert not run2.cache_hit
+    # incremental run (mixed reused/executed) still materializes outputs
+    assert sorted(r.record_id for r in run2.output_records) == \
+        ["r00", "r02", "r04", "r05"]
+    assert all(r.data for r in run2.output_records)
+
+
+# ---------------------------------------------------------------------------
+# Lineage flush is O(delta)
+# ---------------------------------------------------------------------------
+
+
+class _CountingBackend(MemoryBackend):
+    def __init__(self):
+        super().__init__()
+        self.writes = []
+
+    def put(self, key, data):
+        self.writes.append((key, len(data)))
+        super().put(key, data)
+
+
+def test_lineage_flush_writes_only_the_delta():
+    be = _CountingBackend()
+    g = LineageGraph(ObjectStore(be))
+    for i in range(300):
+        g.add_node(f"n{i}", "external", idx=i)
+    g.flush()
+    g.add_node("one-more", "external")
+    n_before = len(be.writes)
+    g.flush()
+    delta_writes = [(k, n) for k, n in be.writes[n_before:]
+                    if k.startswith("meta/lineage")]
+    assert len(delta_writes) == 1
+    # one node's JSON, not the 300-node graph
+    assert delta_writes[0][1] < 300
+    # a fresh load sees base + every segment
+    g2 = LineageGraph(ObjectStore(be))
+    assert g2.node("n299") is not None and g2.node("one-more") is not None
+
+
+def test_lineage_segments_compact_on_load(monkeypatch):
+    monkeypatch.setattr(LineageGraph, "_COMPACT_AT", 3)
+    store = ObjectStore(MemoryBackend())
+    g = LineageGraph(store)
+    for i in range(4):
+        g.add_node(f"n{i}", "external")
+        g.add_edge(f"n{i}", "root", "derived_from")
+        g.flush()
+    assert len(store.list_meta("lineage/seg/")) == 4
+    g2 = LineageGraph(store)  # load compacts
+    assert store.list_meta("lineage/seg/") == []
+    assert all(g2.node(f"n{i}") is not None for i in range(4))
+    assert len(g2.edges_out("n3")) == 1
+    # flushing after compaction starts a fresh segment sequence
+    g2.add_node("post", "external")
+    g2.flush()
+    assert LineageGraph(store).node("post") is not None
+
+
+# ---------------------------------------------------------------------------
+# GC keeps the derivation cache alive
+# ---------------------------------------------------------------------------
+
+
+def test_gc_preserves_cache_hits_and_incremental_reuse():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    r1 = ds.derive(pipe, output="out")
+    plat.gc()
+    r2 = ds.derive(pipe, output="out")
+    assert r2.cache_hit and r2.output_commit == r1.output_commit
+    _delta_v2(ds)
+    plat.gc()
+    r3 = ds.derive(pipe, output="out")
+    assert r3.incremental and r3.n_executed == 3
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _register_upper():
+    @component(kind="map", name="upper")
+    def upper(rec):
+        return Record(rec.record_id, rec.data.upper(), dict(rec.attrs))
+
+    register_pipeline("upper", Pipeline([upper], name="upper"))
+
+
+def test_cli_derive_hit_miss_and_exit_codes(tmp_path, capsys):
+    repo = str(tmp_path / "repo")
+    f = tmp_path / "doc.txt"
+    f.write_bytes(b"hello cli")
+    assert cli_main(["--repo", repo, "check-in", "ds", str(f), "-m", "v1"]) == 0
+    _register_upper()
+
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "ds-up"]) == 0
+    out = capsys.readouterr().out
+    assert "cache miss" in out and "output commit" in out
+
+    # a second CLI invocation is a fresh process over the same repo
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "ds-up"]) == 0
+    assert "cache hit" in capsys.readouterr().out
+
+    assert cli_main(["--repo", repo, "checkout", "ds-up"]) == 0
+    assert "doc.txt" in capsys.readouterr().out
+
+    # exit codes: unknown pipeline -> 1, bad --where -> 2, unknown rev -> 1
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "nope",
+                     "--output", "x"]) == 1
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "x", "--where", "lang=("]) == 2
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "x", "--rev", "ghost"]) == 1
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "x", "--pipelines-module",
+                     "no.such.module"]) == 1
+
+
+def test_cli_derive_no_cache_forces_recompute(tmp_path, capsys):
+    repo = str(tmp_path / "repo")
+    f = tmp_path / "doc.txt"
+    f.write_bytes(b"hello again")
+    cli_main(["--repo", repo, "check-in", "ds", str(f), "-m", "v1"])
+    _register_upper()
+    cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+              "--output", "d"])
+    capsys.readouterr()
+    assert cli_main(["--repo", repo, "derive", "ds", "--pipeline", "upper",
+                     "--output", "d", "--no-cache"]) == 0
+    assert "cache miss" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Plan-level surface
+# ---------------------------------------------------------------------------
+
+
+def test_checkout_plan_transform_surface():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(9), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    pipe = counting_pipeline(cnt)
+    plan = ds.plan(where="lang=en")
+    r = plan.transform(pipe, output="out-en", actor="t")
+    assert r.output_commit is not None
+    assert r.n_inputs == len(plan.entries())
+    r2 = ds.plan(where="lang=en").transform(pipe, output="out-en", actor="t")
+    assert r2.cache_hit
+
+
+def test_derive_without_output_materializes_only():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(6), message="v1")
+    cnt = {"map": 0, "filter": 0}
+    r = ds.derive(counting_pipeline(cnt))
+    assert r.output_commit is None and r.key is not None
+    assert not r.cache_hit
+    assert r.output_records is not None
+    assert sorted(x.record_id for x in r.output_records) == \
+        ["r00", "r02", "r04"]
+
+
+def test_sharding_does_not_change_output():
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(11), message="v1")
+    cnt = {"flatmap": 0}
+    pipe = flatmap_pipeline(cnt)
+    r1 = ds.derive(pipe, output="a", use_cache=False, incremental=False,
+                   update_cache=False, policy=ExecPolicy(n_shards=1))
+    r7 = ds.derive(pipe, output="b", use_cache=False, incremental=False,
+                   update_cache=False,
+                   policy=ExecPolicy(n_shards=7, batch_records=2))
+    assert r1.content_digest == r7.content_digest
