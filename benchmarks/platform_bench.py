@@ -230,7 +230,47 @@ def run(smoke: bool = False,
     rows.append(("derive_incremental", dinc_us,
                  f"{K}/{ND} changed, {inc_speedup:.1f}x vs cold"))
 
+    # --- paged merkle manifests: O(delta) commit + page-wise diff -------------
+    NBIG, DELTA = (4000, 40) if smoke else (50_000, 100)
+    big_docs = _docs(NBIG, 24, seed=11)
+    delta_docs = [Record(f"z{i:05d}", b"delta payload %d" % i,
+                         {"i": NBIG + i}) for i in range(DELTA)]
+    plat_paged = Platform.open(actor="bench")
+    plat_mono = Platform.open(actor="bench", page_size=0)
+    plat_paged.dataset("big").check_in(big_docs)
+    plat_mono.dataset("big").check_in(big_docs)
+    base_paged = plat_paged.versions.get_branch("big", "main")
+    base_mono = plat_mono.versions.get_branch("big", "main")
+    paged_commit_us = timeit(
+        lambda: plat_paged.dataset("big").check_in(delta_docs,
+                                                   message="delta"), 3)
+    mono_commit_us = timeit(
+        lambda: plat_mono.dataset("big").check_in(delta_docs,
+                                                  message="delta"), 3)
+    commit_speedup = mono_commit_us / paged_commit_us
+    rows.append(("commit_append_small_delta", paged_commit_us,
+                 f"+{DELTA} on {NBIG} records, "
+                 f"{commit_speedup:.1f}x vs monolithic"))
+    rows.append(("commit_append_monolithic", mono_commit_us,
+                 f"+{DELTA} on {NBIG} records, full rewrite"))
+
+    head_paged = plat_paged.versions.get_branch("big", "main")
+    head_mono = plat_mono.versions.get_branch("big", "main")
+    paged_diff_us = timeit(
+        lambda: plat_paged.versions.diff(base_paged, head_paged), 5)
+    mono_diff_us = timeit(
+        lambda: plat_mono.versions.diff(base_mono, head_mono), 5)
+    diff_speedup = mono_diff_us / paged_diff_us
+    rows.append(("diff_large", paged_diff_us,
+                 f"{NBIG}+{DELTA} records, {diff_speedup:.1f}x vs "
+                 f"monolithic"))
+    rows.append(("diff_large_monolithic", mono_diff_us,
+                 f"{NBIG}+{DELTA} records, full record walk"))
+
     if metrics is not None:
+        metrics["commit_delta_speedup"] = commit_speedup
+        metrics["commit_delta_records"] = NBIG
+        metrics["diff_large_speedup"] = diff_speedup
         metrics["checkout_filtered_speedup"] = filtered_speedup
         metrics["checkout_filtered_records"] = NF
         metrics["cas_cached_read_speedup"] = nocache_us / cached_us

@@ -76,7 +76,17 @@ def main():
     print("verified:    incremental output == cold recompute "
           f"({r3.content_digest[:16]}…)")
 
-    # 4. lineage: the derivation node explains the output version
+    # 4. paged manifests: the delta commit touched O(changed pages), and
+    # per-page summaries describe the data without loading any page
+    stats = docs.page_stats()
+    print(f"pages:       {stats['n_pages']} page(s) x <= "
+          f"{stats['page_size']} records ({stats['n_records']} total)")
+    for page in stats["pages"]:
+        langs = (page["summary"].get("lang") or {}).get("vals")
+        print(f"               [{page['lo']} .. {page['hi']}] "
+              f"n={page['n']} langs={langs}")
+
+    # 5. lineage: the derivation node explains the output version
     out_node = version_node_id("docs-clean", r3.output_commit)
     anc = plat.ancestors(out_node)
     print(f"lineage:     ancestors({out_node[:40]}…) includes")

@@ -21,6 +21,8 @@ REQUIRED_ROWS = {
         "derive_cold",
         "derive_cached",
         "derive_incremental",
+        "commit_append_small_delta",
+        "diff_large",
     ),
     "loader": (
         "loader_steady_state_legacy",
@@ -29,16 +31,20 @@ REQUIRED_ROWS = {
 }
 REQUIRED_METRICS = {
     "platform": ("checkout_filtered_speedup", "cas_cache_hits",
-                 "derive_cached_speedup", "derive_incremental_speedup"),
+                 "derive_cached_speedup", "derive_incremental_speedup",
+                 "commit_delta_speedup", "diff_large_speedup"),
     "loader": ("loader_steady_state_speedup",),
 }
 # Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
-# committed trajectory must show cached ≫ cold and incremental ≫ cold;
-# smoke runs get a lower floor so loaded CI machines don't flake.
+# committed trajectory must show cached ≫ cold, incremental ≫ cold, and
+# paged manifests ≫ the monolithic baseline; smoke runs get a lower floor
+# so loaded CI machines don't flake.
 RATIO_FLOORS = {
     "platform": {
         "derive_cached_speedup": (10.0, 3.0),
         "derive_incremental_speedup": (10.0, 3.0),
+        "commit_delta_speedup": (10.0, 3.0),
+        "diff_large_speedup": (10.0, 3.0),
     },
 }
 

@@ -25,6 +25,9 @@ Examples:
     repro-cli --repo /tmp/repo lineage <node-id>
     repro-cli --repo /tmp/repo revoke <record-id> --reason "user request"
     repro-cli --repo /tmp/repo grant alice 'speech/*' WRITE
+    repro-cli --repo /tmp/repo cache ls
+    repro-cli --repo /tmp/repo cache stats
+    repro-cli --repo /tmp/repo cache prune --keep-latest 2
 """
 
 from __future__ import annotations
@@ -45,6 +48,13 @@ __all__ = ["main"]
 
 def _open(args) -> Platform:
     return Platform.open(args.repo, actor=args.actor)
+
+
+def _at_least_one(text: str) -> int:
+    value = int(text)
+    if value < 1:
+        raise argparse.ArgumentTypeError("must be >= 1")
+    return value
 
 
 def _parse_where_args(where_args: Optional[List[str]]):
@@ -193,6 +203,60 @@ def cmd_gc(plat: Platform, args) -> int:
     return 0
 
 
+def _cache_slot_rows(plat: Platform):
+    """(key, entry, prov size) rows of the derivation cache, newest first.
+
+    The size comes from the slot's recorded ``prov_bytes`` — reading every
+    prov blob just to len() it would make a listing cost O(total prov
+    bytes); pre-PR-4 slots without the field show "-"."""
+    rows = [(key, entry, entry.get("prov_bytes"))
+            for key, entry in plat.derivations.cache.entries().items()]
+    rows.sort(key=lambda r: r[1].get("created_at", 0.0), reverse=True)
+    return rows
+
+
+def cmd_cache(plat: Platform, args) -> int:
+    """Inspect / prune the derivation cache (``cache ls`` / ``cache stats``
+    / ``cache prune --keep-latest N``)."""
+    cache = plat.derivations.cache
+    if args.cache_cmd == "ls":
+        rows = _cache_slot_rows(plat)
+        if not rows:
+            print("derivation cache is empty")
+            return 0
+        print("key,output_dataset,output_commit,n_inputs,n_outputs,"
+              "prov_bytes,created_at")
+        for key, entry, size in rows:
+            created = entry.get("created_at")
+            print(",".join(str(x) for x in (
+                key,
+                entry.get("output_dataset"),
+                (entry.get("output_commit") or "")[:12],
+                entry.get("n_inputs", 0),
+                entry.get("n_outputs", 0),
+                size if size is not None else "-",
+                f"{created:.0f}" if created else "-")))
+        return 0
+    if args.cache_cmd == "stats":
+        rows = _cache_slot_rows(plat)
+        groups = {(e.get("query"), e.get("pipeline"),
+                   e.get("output_dataset")) for _, e, _ in rows}
+        prov_bytes = sum(size or 0 for _, _, size in rows)
+        print(f"slots {len(rows)}")
+        print(f"groups {len(groups)}  (distinct query+pipeline+output)")
+        print(f"superseded {len(rows) - len(groups)}")
+        print(f"prov_bytes {prov_bytes}")
+        return 0
+    if args.cache_cmd == "prune":
+        removed = cache.prune(keep_latest=args.keep_latest)
+        collected = plat.gc()
+        print(f"pruned {len(removed)} superseded slot(s) "
+              f"(kept latest {args.keep_latest} per group), "
+              f"gc collected {collected} object(s)")
+        return 0
+    raise AssertionError(args.cache_cmd)  # pragma: no cover
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="repro-cli",
                                  description=__doc__.splitlines()[0])
@@ -286,6 +350,19 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     p = sub.add_parser("gc")
     p.set_defaults(fn=cmd_gc)
+
+    p = sub.add_parser("cache",
+                       help="inspect or prune the derivation cache")
+    cache_sub = p.add_subparsers(dest="cache_cmd", required=True)
+    cache_sub.add_parser("ls", help="list cache slots, newest first")
+    cache_sub.add_parser("stats", help="slot/group/provenance-size summary")
+    cp = cache_sub.add_parser(
+        "prune",
+        help="drop superseded slots (older input commits of the same "
+             "query+pipeline+output), then run gc")
+    cp.add_argument("--keep-latest", type=_at_least_one, default=1,
+                    metavar="N", help="slots to keep per group (default 1)")
+    p.set_defaults(fn=cmd_cache)
 
     args = ap.parse_args(argv)
     plat = _open(args)

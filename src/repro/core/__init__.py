@@ -23,7 +23,7 @@ from .dataset import CheckoutPlan, DatasetManager, Record, Snapshot
 from .derive import (Derivation, DerivationCache, DerivationEngine,
                      DerivationResult, ExecPolicy, get_pipeline,
                      register_pipeline, registered_pipelines)
-from .index import AttributeIndex
+from .index import AttributeIndex, PagedAttributeIndex
 from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import (ALL, And, Cmp, Not, Or, Query, QueryParseError, attr,
                     parse_where, record_id_in, tag_in)
@@ -33,9 +33,10 @@ from .store import (BlobRef, FileBackend, IntegrityError, MemoryBackend,
 from .transforms import (BatchComponent, Component, FilterComponent,
                          FlatMapComponent, HumanTask, HumanTaskQueue,
                          MapComponent, Pipeline, ProgramComponent,
-                         WaitingForHuman, component)
-from .versioning import (Commit, Manifest, MergeConflict, RecordEntry,
-                         VersionDiff, VersionStore)
+                         WaitingForHuman, code_fingerprint, component)
+from .versioning import (Commit, Manifest, MergeConflict, PageDirectory,
+                         PagedManifest, RecordEntry, VersionDiff,
+                         VersionStore)
 from .workflow import (RunState, ShardReport, Workflow, WorkflowManager,
                        WorkflowRun)
 
@@ -49,13 +50,13 @@ __all__ = [
     "parse_where", "record_id_in", "tag_in",
     "EdgeKind", "LineageGraph", "NodeKind",
     "RevocationEngine", "RevocationReport", "RevokedError",
-    "AttributeIndex",
+    "AttributeIndex", "PagedAttributeIndex",
     "BlobRef", "FileBackend", "IntegrityError", "MemoryBackend",
     "NotFoundError", "ObjectStore", "StorageBackend",
     "BatchComponent", "Component", "FilterComponent", "FlatMapComponent",
     "HumanTask", "HumanTaskQueue", "MapComponent", "Pipeline",
-    "ProgramComponent", "WaitingForHuman", "component",
-    "Commit", "Manifest", "MergeConflict", "RecordEntry", "VersionDiff",
-    "VersionStore",
+    "ProgramComponent", "WaitingForHuman", "code_fingerprint", "component",
+    "Commit", "Manifest", "MergeConflict", "PageDirectory", "PagedManifest",
+    "RecordEntry", "VersionDiff", "VersionStore",
     "RunState", "ShardReport", "Workflow", "WorkflowManager", "WorkflowRun",
 ]

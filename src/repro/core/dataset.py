@@ -11,6 +11,7 @@ conditions.  The type of data stored is unrestricted."
 
 from __future__ import annotations
 
+import bisect
 import fnmatch
 import hashlib
 import json
@@ -25,7 +26,7 @@ from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import ALL, Cmp, Query, TrueQuery, as_query
 from .store import BlobRef, MemoryBackend, NotFoundError, ObjectStore
 from .versioning import (Commit, Manifest, RecordEntry, VersionDiff,
-                         VersionStore, diff_manifests)
+                         VersionStore)
 
 __all__ = ["Record", "Snapshot", "CheckoutPlan", "DatasetManager",
            "version_node_id"]
@@ -181,34 +182,86 @@ class CheckoutPlan:
         When the commit carries an attribute index and the query algebra can
         be resolved against it, only candidate positions are deserialized
         into :class:`RecordEntry` objects (and re-evaluated only when the
-        index answer is a superset); otherwise this is the original full
-        manifest scan.  Both paths emit identical entry streams — shard and
-        limit count *matches*, which the index path reproduces exactly.
+        index answer is a superset); otherwise this is a full scan.  Paged
+        trees stream page-by-page (batched CAS reads) and pruned plans skip
+        whole pages — candidate-free page blobs are never deserialized;
+        ``explain()`` reports ``pages_total``/``pages_scanned``.  All paths
+        emit identical entry streams — shard and limit count *matches*,
+        which the index path reproduces exactly.
         """
         if self._entries is not None:
             yield from self._entries
             return
         versions = self._dm.versions
         tree = versions.get_commit(self.commit_id).tree
+        directory = versions.get_page_directory(tree)
         plan = None
         if (self.use_index and self.query.serializable
                 and not isinstance(self.query, TrueQuery)):
             index = versions.get_attr_index(tree)
             if index is not None:
                 plan = self.query.index_plan(index)
-        if plan is not None:
+        if directory is not None:
+            yield from self._iter_paged(versions, directory, plan)
+        elif plan is not None:
             positions, exact = plan
             records = versions.get_raw_records(tree)
             self._explain = {"mode": "indexed", "n_records": len(records),
-                             "candidates": len(positions), "exact": exact}
+                             "candidates": len(positions), "exact": exact,
+                             "pages_total": 1, "pages_scanned": 1}
             candidates = (
                 RecordEntry.from_raw(records[pos])
                 for pos in sorted(positions))
             yield from self._filtered(candidates, evaluate=not exact)
         else:
             manifest = versions.get_manifest(tree)
-            self._explain = {"mode": "scan", "n_records": len(manifest)}
+            self._explain = {"mode": "scan", "n_records": len(manifest),
+                             "pages_total": 1, "pages_scanned": 1}
             yield from self._filtered(manifest.iter_entries(), evaluate=True)
+
+    def _iter_paged(self, versions, directory,
+                    plan) -> Iterator[RecordEntry]:
+        """Page-wise execution: load candidate pages lazily, in order.
+
+        ``pages_scanned`` counts pages actually deserialized — index plans
+        skip candidate-free pages entirely, and a satisfied ``limit`` stops
+        the page stream early."""
+        explain: Dict[str, object] = {
+            "n_records": directory.n,
+            "pages_total": len(directory.pages),
+            "pages_scanned": 0,
+        }
+        self._explain = explain
+        if plan is not None:
+            positions, exact = plan
+            offsets = directory.offsets()
+            by_page: Dict[int, List[int]] = {}
+            for pos in sorted(positions):
+                pi = bisect.bisect_right(offsets, pos) - 1
+                by_page.setdefault(pi, []).append(pos - offsets[pi])
+            explain.update(mode="indexed", candidates=len(positions),
+                           exact=exact)
+            page_order = sorted(by_page)
+
+            def candidates():
+                for pi, raw in zip(
+                        page_order,
+                        versions.iter_page_records(directory, page_order)):
+                    explain["pages_scanned"] += 1
+                    for lp in by_page[pi]:
+                        yield RecordEntry.from_raw(raw[lp])
+
+            yield from self._filtered(candidates(), evaluate=not exact)
+        else:
+            explain["mode"] = "scan"
+
+            def stream():
+                for raw in versions.iter_page_records(directory):
+                    explain["pages_scanned"] += 1
+                    for o in raw:
+                        yield RecordEntry.from_raw(o)
+
+            yield from self._filtered(stream(), evaluate=True)
 
     def _filtered(self, entries: Iterable[RecordEntry],
                   evaluate: bool) -> Iterator[RecordEntry]:
@@ -322,9 +375,10 @@ class DatasetManager:
         store: Optional[ObjectStore] = None,
         acl: Optional[AccessController] = None,
         lineage: Optional[LineageGraph] = None,
+        page_size: Optional[int] = None,
     ) -> None:
         self.store = store if store is not None else ObjectStore(MemoryBackend())
-        self.versions = VersionStore(self.store)
+        self.versions = VersionStore(self.store, page_size=page_size)
         self.acl = acl if acl is not None else AccessController(self.store)
         self.lineage = lineage if lineage is not None else LineageGraph(self.store)
         # Commit listeners: the workflow manager subscribes here to implement
@@ -413,6 +467,11 @@ class DatasetManager:
         the derivation engine's reuse path, which must not re-hash
         unchanged payloads).
 
+        The delta path never materializes the base manifest: the records
+        become an add/remove delta that ``VersionStore.commit_delta``
+        applies at page granularity, so committing a small change to a
+        huge dataset costs O(delta + touched pages), not O(dataset).
+
         ``replace=True`` makes the new manifest exactly ``records``
         (materialized-view semantics: base records not re-supplied are
         dropped); the commit still parents onto ``base`` so history and
@@ -425,32 +484,38 @@ class DatasetManager:
         self._ensure_dataset(dataset, actor)
 
         base_id = base or self.versions.get_branch(dataset, branch)
-        base_manifest = (
-            self.versions.get_manifest(self.versions.get_commit(base_id).tree)
-            if base_id
-            else Manifest()
-        )
-        manifest = Manifest() if replace else base_manifest.copy()
-        new_ids: List[str] = []
+        adds: Dict[str, RecordEntry] = {}
         for rec in records:
             if isinstance(rec, RecordEntry):
-                manifest.add(RecordEntry(rec.record_id, rec.blob,
-                                         dict(rec.attrs)))
+                adds[rec.record_id] = RecordEntry(rec.record_id, rec.blob,
+                                                  dict(rec.attrs))
             else:
                 ref = self.store.put_blob(rec.data)
-                manifest.add(RecordEntry(rec.record_id, ref, dict(rec.attrs)))
-            new_ids.append(rec.record_id)
-        for rid in remove_ids:
-            manifest.remove(rid)
+                adds[rec.record_id] = RecordEntry(rec.record_id, ref,
+                                                  dict(rec.attrs))
+        removes = list(remove_ids)
+        for rid in removes:
+            adds.pop(rid, None)  # removal wins over a same-call add
 
-        commit = self.versions.commit(
-            dataset,
-            manifest,
-            parents=[base_id] if base_id else [],
-            author=actor,
-            message=message,
-            meta=meta,
-        )
+        if replace or base_id is None:
+            manifest = Manifest(adds.values())
+            commit = self.versions.commit(
+                dataset,
+                manifest,
+                parents=[base_id] if base_id else [],
+                author=actor,
+                message=message,
+                meta=meta,
+            )
+            # Page-wise diff vs base (shared pages skip wholesale); a
+            # replace of an unchanged view costs O(pages), not O(records).
+            delta = (self.versions.diff(base_id, commit.commit_id)
+                     if base_id else VersionDiff(added=sorted(adds)))
+            n_records = len(manifest)
+        else:
+            commit, delta, n_records = self.versions.commit_delta(
+                dataset, base_id, adds, removes,
+                author=actor, message=message, meta=meta)
         self.versions.set_branch(dataset, branch, commit.commit_id)
         for tag in version_tags:
             self.versions.set_tag(dataset, tag, commit.commit_id)
@@ -458,14 +523,13 @@ class DatasetManager:
         # Record-containment index (drives revocation without full scans):
         # only the records this commit actually added/changed/removed are
         # indexed, so the blob grows O(delta) per commit, not O(records).
-        self._index_records(dataset, commit.commit_id,
-                            diff_manifests(base_manifest, manifest))
+        self._index_records(dataset, commit.commit_id, delta)
 
         # Lineage: version node + derivation/production edges.
         vnode = version_node_id(dataset, commit.commit_id)
         self.lineage.add_node(vnode, NodeKind.DATASET_VERSION,
                               dataset=dataset, commit=commit.commit_id,
-                              n_records=len(manifest))
+                              n_records=n_records)
         if base_id:
             self.lineage.add_edge(vnode, version_node_id(dataset, base_id),
                                   EdgeKind.DERIVED_FROM)

@@ -254,9 +254,50 @@ class DerivationCache:
     def put(self, key: str, entry: dict) -> None:
         entries = dict(self._load())
         entries[key] = entry
+        self._write(entries)
+
+    def _write(self, entries: Dict[str, dict]) -> None:
         ref = self.store.put_json({"v": _CACHE_VERSION, "entries": entries})
         self.store.put_meta(self._PTR, {"blob": ref.digest})
         self._memo = (ref.digest, entries)
+
+    def remove(self, keys: Sequence[str]) -> int:
+        """Drop slots by key; returns how many existed.  The slots' prov
+        blobs stop being gc roots — the next :meth:`DatasetManager.gc`
+        sweeps them (and any prefix-output payloads only they referenced)."""
+        entries = dict(self._load())
+        n = 0
+        for key in keys:
+            if entries.pop(key, None) is not None:
+                n += 1
+        if n:
+            self._write(entries)
+        return n
+
+    def prune(self, keep_latest: int = 1) -> List[str]:
+        """Drop superseded slots, keeping the ``keep_latest`` most recent
+        per (query, pipeline, output dataset) group.
+
+        Slots in one group describe the *same* derivation against older
+        input commits — once a newer one exists, the old output commits
+        remain valid history but their cache/prov entries only pin dead
+        prefix outputs in the CAS.  Returns the removed slot keys; callers
+        normally follow with :meth:`DatasetManager.gc`.
+        """
+        if keep_latest < 1:
+            raise ValueError("keep_latest must be >= 1")
+        groups: Dict[tuple, List[Tuple[float, str]]] = {}
+        for key, entry in self._load().items():
+            group = (entry.get("query"), entry.get("pipeline"),
+                     entry.get("output_dataset"))
+            groups.setdefault(group, []).append(
+                (entry.get("created_at", 0.0), key))
+        doomed: List[str] = []
+        for slots in groups.values():
+            slots.sort(reverse=True)
+            doomed.extend(key for _, key in slots[keep_latest:])
+        self.remove(doomed)
+        return doomed
 
     def gc_roots(self) -> List[str]:
         """Digests this cache keeps alive: the map blob, each provenance
@@ -323,9 +364,11 @@ class DerivationEngine:
         # run parked on a human task resume without re-running the prefix.
         self._prefix_memo: "OrderedDict[tuple, List[_Group]]" = OrderedDict()
         self._memo_cap = 4
-        # prov blob digest -> parsed reuse map (blobs validated at build).
-        # Prov blobs are content-addressed, so entries cannot go stale.
-        self._reuse_memo: "OrderedDict[str, dict]" = OrderedDict()
+        # (prov blob digest, input commit) -> parsed reuse map (blobs
+        # validated at build).  Keyed by the *current* input commit too:
+        # the page-shared "unchanged by construction" markers are only
+        # valid against the tree they were computed for.
+        self._reuse_memo: "OrderedDict[tuple, dict]" = OrderedDict()
         # output tree digest -> content digest (trees are immutable).
         self._tree_digest_memo: "OrderedDict[str, str]" = OrderedDict()
         dm._derivation_engine = self
@@ -455,8 +498,9 @@ class DerivationEngine:
             out_for_checkin = flat
 
         prov_digest = None
+        prov_bytes = 0
         if cacheable and update_cache:
-            prov_digest, prov_entries = self._write_prov(groups)
+            prov_digest, prov_bytes, prov_entries = self._write_prov(groups)
             if not suffix:
                 # The prov step already content-addressed every output
                 # payload; check in refs so blobs are not re-hashed.
@@ -496,6 +540,7 @@ class DerivationEngine:
                     "output_commit": res.output_commit,
                     "content": res.content_digest,
                     "prov": prov_digest,
+                    "prov_bytes": prov_bytes,
                     "n_inputs": res.n_inputs,
                     "n_outputs": res.n_outputs,
                     "created_at": time.time(),
@@ -590,14 +635,21 @@ class DerivationEngine:
 
     def _load_reuse(
         self, deriv: Derivation, output_dataset: str
-    ) -> Optional[Dict[str, Tuple[dict, List[RecordEntry]]]]:
+    ) -> Optional[Dict[str, Tuple[Optional[dict], List[RecordEntry]]]]:
         """Per-record reuse map from the latest prior derivation of the
         same (query, pipeline) on a different input commit.
 
         Maps input record id → (prior raw manifest record, prior output
         entries); a new input entry may reuse the outputs iff it matches
         the prior raw record on payload digest AND attrs
-        (:func:`~repro.core.versioning.raw_entry_matches`)."""
+        (:func:`~repro.core.versioning.raw_entry_matches`).
+
+        Page-granular fast path: when both input trees are paged, a prior
+        record living in a page the two trees *share* is unchanged by
+        construction — its raw slot is ``None`` ("no compare needed"), and
+        only the unshared prior pages are ever deserialized, so an
+        incremental re-run reads O(changed pages) of the prior manifest
+        instead of all of it."""
         best: Optional[dict] = None
         for entry in self.cache.entries().values():
             if (entry.get("query") == deriv.query
@@ -612,24 +664,47 @@ class DerivationEngine:
         if best is None:
             return None
         prov = best["prov"]
+        versions = self.dm.versions
         with self._lock:
-            hit = self._reuse_memo.get(prov)
+            hit = self._reuse_memo.get((prov, deriv.input_commit))
             if hit is not None:
-                self._reuse_memo.move_to_end(prov)
+                self._reuse_memo.move_to_end((prov, deriv.input_commit))
                 return hit
         try:
             doc = self.dm.store.get_json(prov)
-            prev_tree = self.dm.versions.get_commit(
-                best["input_commit"]).tree
-            prev_raw = {o["id"]: o
-                        for o in self.dm.versions.get_raw_records(prev_tree)}
+            prev_tree = versions.get_commit(best["input_commit"]).tree
+            cur_tree = versions.get_commit(deriv.input_commit).tree
+            prev_dir = versions.get_page_directory(prev_tree)
+            cur_dir = versions.get_page_directory(cur_tree)
+            if prev_dir is not None and cur_dir is not None:
+                shared = cur_dir.page_digests()
+                unshared = [i for i, p in enumerate(prev_dir.pages)
+                            if p.digest not in shared]
+                prev_raw = {
+                    o["id"]: o
+                    for raw in versions.iter_page_records(prev_dir, unshared)
+                    for o in raw}
+
+                def prior_raw(rid: str) -> Tuple[Optional[dict], bool]:
+                    pi = prev_dir.page_for(rid)
+                    if pi >= 0 and prev_dir.pages[pi].digest in shared:
+                        return None, True  # page shared ⇒ entry unchanged
+                    raw = prev_raw.get(rid)
+                    return raw, raw is not None
+            else:
+                prev_all = {o["id"]: o
+                            for o in versions.get_raw_records(prev_tree)}
+
+                def prior_raw(rid: str) -> Tuple[Optional[dict], bool]:
+                    raw = prev_all.get(rid)
+                    return raw, raw is not None
         except NotFoundError:
             return None
         store = self.dm.store
         reuse = {}
         for rid, outs in doc.get("groups", []):
-            raw = prev_raw.get(rid)
-            if raw is None:
+            raw, known = prior_raw(rid)
+            if not known:
                 continue
             entries = [RecordEntry.from_json(o) for o in outs]
             # Validate once at parse time: a revoked/collected output
@@ -638,7 +713,7 @@ class DerivationEngine:
             if all(store.has_blob(e.blob.digest) for e in entries):
                 reuse[rid] = (raw, entries)
         with self._lock:
-            self._reuse_memo[prov] = reuse
+            self._reuse_memo[(prov, deriv.input_commit)] = reuse
             while len(self._reuse_memo) > 4:
                 self._reuse_memo.popitem(last=False)
         return reuse
@@ -647,7 +722,8 @@ class DerivationEngine:
         self,
         entries: Sequence[RecordEntry],
         prefix: Sequence[Component],
-        reuse: Optional[Dict[str, Tuple[dict, List[RecordEntry]]]],
+        reuse: Optional[Dict[str, Tuple[Optional[dict],
+                                        List[RecordEntry]]]],
         policy: ExecPolicy,
         run_id: str,
         res: DerivationResult,
@@ -658,7 +734,11 @@ class DerivationEngine:
         tasks: List[Tuple[int, RecordEntry]] = []
         for pos, e in enumerate(entries):
             prior = reuse.get(e.record_id) if reuse else None
-            if prior is not None and raw_entry_matches(prior[0], e):
+            # A ``None`` raw slot is the page-granular witness: the record
+            # sits in a manifest page shared by both input trees, so it is
+            # unchanged by construction and skips the per-record compare.
+            if prior is not None and (prior[0] is None
+                                      or raw_entry_matches(prior[0], e)):
                 groups[pos] = _Group(pos, e.record_id, list(prior[1]),
                                      reused=True)
             elif not prefix:
@@ -833,10 +913,12 @@ class DerivationEngine:
 
     def _write_prov(
         self, groups: Sequence[_Group]
-    ) -> Tuple[str, List[RecordEntry]]:
+    ) -> Tuple[str, int, List[RecordEntry]]:
         """Persist the provenance blob: input record → output entries, in
         input order.  Executed outputs are content-addressed into the CAS
-        here (dedups with the output commit's own blobs)."""
+        here (dedups with the output commit's own blobs).  Returns
+        (digest, size, entries) — the size is recorded on the cache slot
+        so ``repro-cli cache ls`` never has to read prov blobs."""
         store = self.dm.store
         body: List[list] = []
         flat_entries: List[RecordEntry] = []
@@ -852,7 +934,7 @@ class DerivationEngine:
             body.append([g.rid, [e.to_json() for e in outs]])
             flat_entries.extend(outs)
         ref = store.put_json({"v": _CACHE_VERSION, "groups": body})
-        return ref.digest, flat_entries
+        return ref.digest, ref.size, flat_entries
 
 
 def derivation_gc_roots(store: ObjectStore) -> List[str]:

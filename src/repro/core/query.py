@@ -282,33 +282,29 @@ class Cmp(Query):
                 # ne ...); posting lists are complete, so absence is exact
                 out |= index.all_positions() - present
             return out, exact
-        zones = index.zones_for(self.field)
-        if zones is not None and self.cmp in ("eq", "lt", "le", "gt", "ge"):
+        spans = index.zone_spans_for(self.field)
+        if spans is not None and self.cmp in ("eq", "lt", "le", "gt", "ge"):
             want = self.value
             if isinstance(want, bool):
                 want = int(want)
             if isinstance(want, (int, float)):
                 # Only numeric values can satisfy a numeric range predicate
                 # (str <op> number raises -> False; absent fails the present
-                # check), so blocks whose numeric [min, max] cannot reach
+                # check), so spans whose numeric [min, max] cannot reach
                 # the bound are safely pruned.  Superset: re-evaluate.
                 # All comparisons are NON-strict: zone bounds and ``w`` are
                 # float-rounded (ints >= 2**53 collapse), so `lo < w` could
-                # prune a block holding a true `have < want` match whose
+                # prune a span holding a true `have < want` match whose
                 # float images are equal.  have < want only guarantees
                 # float(have) <= float(want), hence `lo <= w`.
                 w = float(want)
                 out = set()
-                for b, mm in enumerate(zones):
-                    if mm is None:
-                        continue
-                    lo, hi = mm
+                for start, end, lo, hi in spans:
                     hit = (lo <= w if self.cmp in ("lt", "le") else
                            hi >= w if self.cmp in ("gt", "ge") else
                            lo <= w <= hi)
                     if hit:
-                        out.update(range(b * index.block,
-                                         min((b + 1) * index.block, index.n)))
+                        out.update(range(start, end))
                 return out, False
         return None
 

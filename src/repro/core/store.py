@@ -482,6 +482,11 @@ class ObjectStore:
     def get_json(self, ref):
         return json.loads(self.get_blob(ref).decode())
 
+    def get_jsons(self, refs: Sequence[Union[BlobRef, str]]) -> List[dict]:
+        """Batched :meth:`get_json` — one grouped chunk pass for many small
+        documents (manifest pages, per-page indexes)."""
+        return [json.loads(b.decode()) for b in self.get_blobs(refs)]
+
     # -- mutable metadata (refs live here, not content-addressed) ------------
 
     def put_meta(self, name: str, obj) -> None:

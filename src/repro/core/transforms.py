@@ -20,6 +20,7 @@ from __future__ import annotations
 import hashlib
 import json
 import time
+import types
 import uuid
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
@@ -40,7 +41,83 @@ __all__ = [
     "WaitingForHuman",
     "Pipeline",
     "component",
+    "code_fingerprint",
 ]
+
+
+def _feed_code(h, code: types.CodeType, seen: set) -> None:
+    """Hash a code object's behavior-bearing parts (bytecode, names,
+    consts — nested code objects recursively)."""
+    if id(code) in seen:
+        return
+    seen.add(id(code))
+    h.update(code.co_code)
+    h.update(repr(code.co_names).encode())
+    h.update(repr(code.co_varnames).encode())
+    for const in code.co_consts:
+        _feed_value(h, const, seen)
+
+
+def _feed_value(h, value, seen: set) -> None:
+    if isinstance(value, types.CodeType):
+        _feed_code(h, value, seen)
+    elif isinstance(value, types.FunctionType):
+        _feed_function(h, value, seen)
+    elif isinstance(value, (str, bytes, int, float, bool, complex,
+                            type(None))):
+        h.update(repr(value).encode())
+    elif isinstance(value, tuple):
+        for v in value:
+            _feed_value(h, v, seen)
+    elif isinstance(value, frozenset):
+        # Iteration order varies with per-process string-hash
+        # randomization, so hash the *sorted element digests* — stable
+        # across processes, order-free.
+        h.update(b"{" + b"".join(sorted(_value_digest(v, seen)
+                                        for v in value)) + b"}")
+    else:
+        # Mutable containers (dict/list/set) and arbitrary objects hash by
+        # type only — deliberately.  Components routinely capture mutable
+        # state that changes *while the pipeline runs* (stats counters,
+        # caches); folding its contents into the identity would give the
+        # same pipeline a new fingerprint after every execution and defeat
+        # the derivation cache.  The cost: editing a value inside a
+        # captured mutable container is invisible to the fingerprint —
+        # capture immutable values (or pass them as component config) for
+        # cache-busting edits.
+        h.update(type(value).__qualname__.encode())
+
+
+def _value_digest(value, seen: set) -> bytes:
+    sub = hashlib.sha256()
+    _feed_value(sub, value, seen)
+    return sub.digest()
+
+
+def _feed_function(h, fn, seen: set) -> None:
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        # builtins / callables without code: identity is their name
+        h.update(getattr(fn, "__qualname__", repr(type(fn))).encode())
+        return
+    _feed_code(h, code, seen)
+    for cell in (getattr(fn, "__closure__", None) or ()):
+        try:
+            _feed_value(h, cell.cell_contents, seen)
+        except ValueError:  # pragma: no cover — unfilled cell
+            pass
+    for default in (getattr(fn, "__defaults__", None) or ()):
+        _feed_value(h, default, seen)
+
+
+def code_fingerprint(fn: Callable) -> str:
+    """Deterministic digest of a callable's bytecode, consts, names,
+    closure values and defaults — stable across processes for identical
+    source (same interpreter version), different whenever the body is
+    edited in place."""
+    h = hashlib.sha256()
+    _feed_function(h, fn, set())
+    return h.hexdigest()[:16]
 
 
 class Component(ABC):
@@ -55,6 +132,8 @@ class Component(ABC):
 
     name: str = "component"
     per_record: bool = False
+    # Wrapped-callable attributes whose code objects join the fingerprint.
+    _CODE_ATTRS = ("fn", "pred")
 
     def __init__(self, name: Optional[str] = None, **config) -> None:
         if name is not None:
@@ -66,13 +145,26 @@ class Component(ABC):
                 ) -> Iterator[Record]: ...
 
     def fingerprint(self) -> str:
-        """Digest of (type, name, config) — cache / lineage identity."""
-        body = json.dumps(
-            {"type": type(self).__name__, "name": self.name,
-             "config": {k: repr(v) for k, v in sorted(self.config.items())}},
-            sort_keys=True,
-        )
-        return hashlib.sha256(body.encode()).hexdigest()[:16]
+        """Digest of (type, name, config, wrapped code) — cache / lineage
+        identity.
+
+        Components that wrap a user callable (``fn`` / ``pred``) also hash
+        its bytecode and consts, so a transform edited *in place* — same
+        name, new body — changes the pipeline fingerprint and forces a
+        recompute instead of silently reusing a stale derivation cache.
+        Library components (their behavior is their type + config) hash
+        nothing extra and keep their historical fingerprints.
+        """
+        body = {"type": type(self).__name__, "name": self.name,
+                "config": {k: repr(v)
+                           for k, v in sorted(self.config.items())}}
+        code = {attr: code_fingerprint(getattr(self, attr))
+                for attr in self._CODE_ATTRS
+                if callable(getattr(self, attr, None))}
+        if code:
+            body["code"] = code
+        blob = json.dumps(body, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     # Chaining sugar: ``a | b | c`` builds a Pipeline.
     def __or__(self, other: Union["Component", "Pipeline"]) -> "Pipeline":

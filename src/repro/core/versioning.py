@@ -1,36 +1,63 @@
-"""Dataset versioning: merkle manifests, commit DAG, refs, diff and merge.
+"""Dataset versioning: paged merkle manifests, commit DAG, refs, diff, merge.
 
 Paper features covered here: "Dataset versioning — Version control and
 version difference".
 
 A dataset *version* is a :class:`Commit` pointing at a *manifest*: the
-ordered map ``record_id -> (blob digest, attrs)``.  Manifests are stored
-content-addressed, so two versions that share most records share the
-manifest's record entries byte-for-byte at the chunk level and the blobs
-themselves dedupe in the CAS.  Commits form a DAG (parents), enabling
-branches, tags, three-way merge and O(changed) diffs.
+ordered map ``record_id -> (blob digest, attrs)``.  Manifests are stored as
+a **paged merkle tree**: the record-id-sorted entry stream is split into
+contiguous pages (``page_size`` records each, content-addressed blobs), and
+a small root *page directory* blob — page digests, record counts, key
+ranges, per-page attribute summaries — is the commit ``tree``.  The payoff
+is that every manifest operation costs what actually changed:
+
+- ``commit_delta`` starts from the parent directory, rewrites only the
+  pages the delta touches, and reuses every other page digest verbatim
+  (structural sharing), so a small check-in on a huge dataset writes a few
+  pages plus one directory instead of re-serializing the whole map.
+- ``diff``/``merge`` skip page pairs with equal digests wholesale and only
+  deserialize the pages that differ.
+- checkout streams page-by-page, and per-page attribute indexes (see
+  :mod:`repro.core.index`) let query plans prune whole pages before any
+  page blob is read.
+
+Legacy monolithic manifests (one ``{"records": [...]}`` blob per commit)
+still load transparently — every reader sniffs the tree blob and takes the
+appropriate path ("migrate on read": the first commit on top of a legacy
+tree writes the paged layout).  ``VersionStore(page_size=0)`` keeps writing
+the monolithic layout, which the equivalence tests and benches use as the
+baseline.  Commits form a DAG (parents), enabling branches, tags,
+three-way merge and O(changed) diffs.
 """
 
 from __future__ import annotations
 
+import bisect
 import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (Dict, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Set, Tuple, Union)
 
-from .index import AttributeIndex
+from .index import AttributeIndex, PagedAttributeIndex, page_summary
 from .store import BlobRef, NotFoundError, ObjectStore, sha256_hex
 
 __all__ = [
     "RecordEntry",
     "Manifest",
+    "PagedManifest",
+    "PageInfo",
+    "PageDirectory",
     "Commit",
     "VersionDiff",
     "MergeConflict",
     "VersionStore",
     "raw_entry_matches",
+    "DEFAULT_PAGE_SIZE",
 ]
+
+DEFAULT_PAGE_SIZE = 1024
 
 
 @dataclass(frozen=True)
@@ -111,6 +138,174 @@ class Manifest:
         return Manifest(self.entries())
 
 
+# ---------------------------------------------------------------------------
+# Paged layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PageInfo:
+    """Directory row for one manifest page."""
+
+    digest: str                       # page blob digest
+    n: int                            # records in the page
+    lo: str                           # first record id
+    hi: str                           # last record id
+    summary: Mapping[str, dict] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"blob": self.digest, "n": self.n, "lo": self.lo,
+                "hi": self.hi, "summary": dict(self.summary)}
+
+    @staticmethod
+    def from_json(obj: dict) -> "PageInfo":
+        return PageInfo(obj["blob"], int(obj["n"]), obj["lo"], obj["hi"],
+                        obj.get("summary", {}))
+
+
+class PageDirectory:
+    """The root of a paged manifest: ordered page rows + key ranges."""
+
+    VERSION = 1
+
+    def __init__(self, pages: Sequence[PageInfo],
+                 page_size: int = DEFAULT_PAGE_SIZE) -> None:
+        self.pages = list(pages)
+        self.page_size = page_size
+        self.n = sum(p.n for p in self.pages)
+        self._his = [p.hi for p in self.pages]
+
+    def offsets(self) -> List[int]:
+        """Global position of each page's first record."""
+        out, total = [], 0
+        for p in self.pages:
+            out.append(total)
+            total += p.n
+        return out
+
+    def page_for(self, record_id: str) -> int:
+        """Index of the page that contains — or would receive — ``rid``.
+
+        Pages partition the sorted record-id space contiguously, so this is
+        the first page whose ``hi`` bound is >= the id (ids past the last
+        ``hi`` route to the last page).  -1 iff the directory is empty.
+        """
+        if not self.pages:
+            return -1
+        return min(bisect.bisect_left(self._his, record_id),
+                   len(self.pages) - 1)
+
+    def page_digests(self) -> Set[str]:
+        return {p.digest for p in self.pages}
+
+    def to_json(self) -> dict:
+        return {
+            "v": self.VERSION,
+            "kind": "pagedir",
+            "page_size": self.page_size,
+            "n": self.n,
+            "pages": [p.to_json() for p in self.pages],
+        }
+
+    @staticmethod
+    def from_json(obj: dict) -> "PageDirectory":
+        return PageDirectory(
+            [PageInfo.from_json(p) for p in obj.get("pages", [])],
+            int(obj.get("page_size", DEFAULT_PAGE_SIZE)))
+
+    def stats(self) -> dict:
+        """Page-level shape + per-page summaries (quality-tooling surface)."""
+        return {
+            "n_records": self.n,
+            "n_pages": len(self.pages),
+            "page_size": self.page_size,
+            "pages": [{"n": p.n, "lo": p.lo, "hi": p.hi,
+                       "summary": dict(p.summary)} for p in self.pages],
+        }
+
+
+class PagedManifest(Manifest):
+    """Lazy read view over a page directory.
+
+    Satisfies the full :class:`Manifest` surface; reads resolve through
+    the directory (``get``/``in`` load one page, ``iter_entries`` streams
+    pages, ``len`` is free) and the first mutation materializes the entry
+    dict so writers see plain-Manifest semantics.
+    """
+
+    def __init__(self, vs: "VersionStore", directory: PageDirectory) -> None:
+        self._vs = vs
+        self._dir = directory
+        self._entries: Optional[Dict[str, RecordEntry]] = None  # type: ignore[assignment]
+
+    @property
+    def directory(self) -> PageDirectory:
+        return self._dir
+
+    def _materialize(self) -> Dict[str, RecordEntry]:
+        if self._entries is None:
+            self._entries = {e.record_id: e for e in self._iter_pages()}
+        return self._entries
+
+    def _iter_pages(self) -> Iterator[RecordEntry]:
+        for raw in self._vs.iter_page_records(self._dir):
+            for o in raw:
+                yield RecordEntry.from_raw(o)
+
+    # -- reads ---------------------------------------------------------------
+
+    def get(self, record_id: str) -> Optional[RecordEntry]:
+        if self._entries is not None:
+            return self._entries.get(record_id)
+        pi = self._dir.page_for(record_id)
+        if pi < 0:
+            return None
+        recs = self._vs.get_page_records(self._dir.pages[pi].digest)
+        i = bisect.bisect_left(recs, record_id, key=lambda o: o["id"])
+        if i < len(recs) and recs[i]["id"] == record_id:
+            return RecordEntry.from_raw(recs[i])
+        return None
+
+    def __contains__(self, record_id: str) -> bool:
+        return self.get(record_id) is not None
+
+    def __len__(self) -> int:
+        if self._entries is not None:
+            return len(self._entries)
+        return self._dir.n
+
+    def record_ids(self) -> List[str]:
+        if self._entries is not None:
+            return sorted(self._entries)
+        return [o["id"] for raw in self._vs.iter_page_records(self._dir)
+                for o in raw]
+
+    def entries(self) -> List[RecordEntry]:
+        if self._entries is not None:
+            return [self._entries[rid] for rid in sorted(self._entries)]
+        return list(self._iter_pages())
+
+    def iter_entries(self) -> Iterable[RecordEntry]:
+        if self._entries is not None:
+            yield from (self._entries[rid] for rid in sorted(self._entries))
+            return
+        yield from self._iter_pages()
+
+    def to_json(self) -> dict:
+        return {"records": [e.to_json() for e in self.entries()]}
+
+    def copy(self) -> "Manifest":
+        return Manifest(self.iter_entries())
+
+    # -- writes (materialize first) ------------------------------------------
+
+    def add(self, entry: RecordEntry) -> None:
+        self._materialize()[entry.record_id] = entry
+
+    def remove(self, record_id: str) -> None:
+        self._materialize().pop(record_id, None)
+
+
 @dataclass(frozen=True)
 class Commit:
     """One immutable dataset version."""
@@ -181,46 +376,182 @@ class VersionStore:
 
     Refs are mutable metadata: ``refs/<dataset>/heads/<branch>`` and
     ``refs/<dataset>/tags/<tag>`` point at commit ids.
+
+    ``page_size`` controls how new manifests are written: the default
+    paged merkle layout, or — with ``page_size=0`` — the legacy monolithic
+    blob (kept as the measurable baseline; reads always accept both).
     """
 
-    # Parsed-manifest cache size.  Trees are content-addressed (immutable),
-    # so entries can never go stale; the cap only bounds memory.
+    # Parsed caches.  Trees, pages and page indexes are content-addressed
+    # (immutable), so entries can never go stale; caps only bound memory.
     _RECORDS_CACHE_CAP = 4
+    _PAGE_CACHE_CAP = 128
+    _DIR_CACHE_CAP = 16
     _INDEX_CACHE_CAP = 8
+    # Pages are rewritten on touch and split once they exceed twice the
+    # target, so steady-state pages hold between page_size and 2*page_size
+    # records and a delta commit rewrites O(touched pages).
+    _SPLIT_FACTOR = 2
+    # Batched page fetch window for streaming scans.
+    _PAGE_FETCH_WINDOW = 8
 
-    def __init__(self, store: ObjectStore) -> None:
+    def __init__(self, store: ObjectStore,
+                 page_size: Optional[int] = None) -> None:
         self.store = store
+        self.page_size = DEFAULT_PAGE_SIZE if page_size is None \
+            else max(0, int(page_size))
         self._cache_lock = threading.Lock()
         self._records_cache: "OrderedDict[str, list]" = OrderedDict()
-        self._index_cache: "OrderedDict[str, Optional[AttributeIndex]]" = \
+        self._page_cache: "OrderedDict[str, list]" = OrderedDict()
+        self._dir_cache: "OrderedDict[str, Optional[PageDirectory]]" = \
             OrderedDict()
+        self._index_cache: "OrderedDict[str, Optional[object]]" = \
+            OrderedDict()
+
+    # -- cache plumbing ------------------------------------------------------
+
+    def _cache_get(self, cache: OrderedDict, key: str):
+        with self._cache_lock:
+            if key in cache:
+                cache.move_to_end(key)
+                return cache[key]
+        return None
+
+    def _cache_put(self, cache: OrderedDict, key: str, value, cap: int):
+        with self._cache_lock:
+            cache[key] = value
+            while len(cache) > cap:
+                cache.popitem(last=False)
 
     # -- manifests -----------------------------------------------------------
 
     def put_manifest(self, manifest: Manifest) -> str:
-        return self.store.put_json(manifest.to_json()).digest
+        """Write a manifest from scratch; returns the tree digest.
+
+        Paged stores paginate the sorted entry stream (reusing a page blob
+        whenever its content already exists — identical runs of records
+        dedupe structurally); ``page_size=0`` writes the legacy blob.
+        """
+        if not self.page_size:
+            return self.store.put_json(manifest.to_json()).digest
+        raw = [e.to_json() for e in manifest.iter_entries()]
+        directory = self._paginate(raw)
+        return self._put_directory(directory)
+
+    def _paginate(self, raw_records: List[dict]) -> PageDirectory:
+        """Split record-id-sorted raw records into fixed-fanout pages."""
+        pages: List[PageInfo] = []
+        step = self.page_size
+        for off in range(0, len(raw_records), step):
+            pages.append(self._write_page(raw_records[off:off + step]))
+        return PageDirectory(pages, self.page_size)
+
+    def _write_page(self, raw_records: List[dict]) -> PageInfo:
+        ref = self.store.put_json({"records": raw_records})
+        self._cache_put(self._page_cache, ref.digest, raw_records,
+                        self._PAGE_CACHE_CAP)
+        return PageInfo(ref.digest, len(raw_records),
+                        raw_records[0]["id"], raw_records[-1]["id"],
+                        page_summary([o.get("attrs", {})
+                                      for o in raw_records]))
+
+    def _put_directory(self, directory: PageDirectory) -> str:
+        digest = self.store.put_json(directory.to_json()).digest
+        self._cache_put(self._dir_cache, digest, directory,
+                        self._DIR_CACHE_CAP)
+        return digest
+
+    def get_page_directory(self, tree_digest: str) -> Optional[PageDirectory]:
+        """Parsed page directory for a tree; ``None`` for legacy monolithic
+        trees (callers then take the records-list paths)."""
+        with self._cache_lock:
+            if tree_digest in self._dir_cache:
+                self._dir_cache.move_to_end(tree_digest)
+                return self._dir_cache[tree_digest]
+            if tree_digest in self._records_cache:  # known-legacy tree
+                return None
+        obj = self.store.get_json(tree_digest)
+        if obj.get("kind") == "pagedir":
+            directory = PageDirectory.from_json(obj)
+            self._cache_put(self._dir_cache, tree_digest, directory,
+                            self._DIR_CACHE_CAP)
+            return directory
+        self._cache_put(self._dir_cache, tree_digest, None,
+                        self._DIR_CACHE_CAP)
+        self._cache_put(self._records_cache, tree_digest,
+                        obj.get("records", []), self._RECORDS_CACHE_CAP)
+        return None
+
+    def get_page_records(self, page_digest: str) -> list:
+        """One page's parsed raw record list (treat as immutable)."""
+        hit = self._cache_get(self._page_cache, page_digest)
+        if hit is not None:
+            return hit
+        records = self.store.get_json(page_digest).get("records", [])
+        self._cache_put(self._page_cache, page_digest, records,
+                        self._PAGE_CACHE_CAP)
+        return records
+
+    def iter_page_records(self, directory: PageDirectory,
+                          page_indices: Optional[Sequence[int]] = None
+                          ) -> Iterator[list]:
+        """Yield raw record lists page-by-page (batched CAS reads).
+
+        Uncached pages are fetched through ``ObjectStore.get_blobs`` in
+        bounded windows, so a full-manifest stream pays grouped backend
+        reads instead of one round-trip per page.
+        """
+        indices = list(page_indices) if page_indices is not None \
+            else range(len(directory.pages))
+        window = self._PAGE_FETCH_WINDOW
+        batch: List[int] = []
+        for pi in indices:
+            batch.append(pi)
+            if len(batch) >= window:
+                yield from self._fetch_pages(directory, batch)
+                batch = []
+        if batch:
+            yield from self._fetch_pages(directory, batch)
+
+    def _fetch_pages(self, directory: PageDirectory,
+                     page_indices: Sequence[int]) -> Iterator[list]:
+        digests = [directory.pages[pi].digest for pi in page_indices]
+        missing = [d for d in digests
+                   if self._cache_get(self._page_cache, d) is None]
+        if missing:
+            for d, doc in zip(missing, self.store.get_jsons(missing)):
+                self._cache_put(self._page_cache, d, doc.get("records", []),
+                                self._PAGE_CACHE_CAP)
+        for d in digests:
+            yield self.get_page_records(d)
 
     def get_raw_records(self, tree_digest: str) -> list:
         """The manifest's parsed ``records`` list (record-id-sorted), cached.
 
-        This is the checkout hot path: repeated checkouts of the same commit
-        skip the JSON parse entirely, and index-pruned checkouts construct
-        :class:`RecordEntry` objects only at candidate positions.  Callers
-        must treat the returned list and its dicts as immutable.
+        Works for both layouts (paged trees concatenate their pages).
+        Callers must treat the returned list and its dicts as immutable.
         """
-        with self._cache_lock:
-            hit = self._records_cache.get(tree_digest)
-            if hit is not None:
-                self._records_cache.move_to_end(tree_digest)
-                return hit
-        records = self.store.get_json(tree_digest).get("records", [])
-        with self._cache_lock:
-            self._records_cache[tree_digest] = records
-            while len(self._records_cache) > self._RECORDS_CACHE_CAP:
-                self._records_cache.popitem(last=False)
+        hit = self._cache_get(self._records_cache, tree_digest)
+        if hit is not None:
+            return hit
+        directory = self.get_page_directory(tree_digest)
+        if directory is None:
+            # usually populated by get_page_directory's sniff; re-fetch if
+            # the records cache evicted it since the tree was last seen
+            records = self._cache_get(self._records_cache, tree_digest)
+            if records is None:
+                records = self.store.get_json(tree_digest).get("records", [])
+        else:
+            records = [o for raw in self.iter_page_records(directory)
+                       for o in raw]
+        self._cache_put(self._records_cache, tree_digest, records,
+                        self._RECORDS_CACHE_CAP)
         return records
 
     def get_manifest(self, tree_digest: str) -> Manifest:
+        directory = self.get_page_directory(tree_digest)
+        if directory is not None:
+            return PagedManifest(self, directory)
         return Manifest(RecordEntry.from_raw(o)
                         for o in self.get_raw_records(tree_digest))
 
@@ -229,38 +560,102 @@ class VersionStore:
     def _attr_index_meta_key(self, tree_digest: str) -> str:
         return f"attridx/{tree_digest}"
 
+    def _page_index_meta_key(self, page_digest: str) -> str:
+        return f"attridx/page/{page_digest}"
+
+    def _ensure_page_index(self, page: PageInfo) -> str:
+        """Idempotently build/write one page's attribute index; returns its
+        blob digest.  Content-addressed by page digest, so pages carried
+        verbatim from the parent commit never rebuild."""
+        key = self._page_index_meta_key(page.digest)
+        ptr = self.store.get_meta(key)
+        if ptr is not None and self.store.has_blob(ptr["blob"]):
+            return ptr["blob"]
+        entries = [RecordEntry.from_raw(o)
+                   for o in self.get_page_records(page.digest)]
+        idx = AttributeIndex.build(entries)
+        ref = self.store.put_json(idx.to_json())
+        self.store.put_meta(key, {"blob": ref.digest, "v": idx.VERSION})
+        return ref.digest
+
     def ensure_attr_index(self, tree_digest: str,
-                          manifest: Manifest) -> None:
-        """Write the content-addressed attribute index blob for ``tree``
-        (idempotent — identical manifests share one index)."""
+                          manifest: Optional[Manifest] = None) -> None:
+        """Write the attribute index for ``tree`` (idempotent).
+
+        Paged trees get one index blob per page plus a small pointer doc
+        naming them; legacy trees keep the single global index blob.
+        """
+        directory = self.get_page_directory(tree_digest)
         key = self._attr_index_meta_key(tree_digest)
+        if directory is not None:
+            ptr = self.store.get_meta(key)
+            if ptr is not None and self._paged_index_intact(ptr):
+                return
+            page_idx = [self._ensure_page_index(p) for p in directory.pages]
+            doc = {"v": PagedAttributeIndex.VERSION, "pages": page_idx,
+                   "counts": [p.n for p in directory.pages],
+                   "n": directory.n}
+            ref = self.store.put_json(doc)
+            self.store.put_meta(key, {"blob": ref.digest,
+                                      "v": PagedAttributeIndex.VERSION})
+            with self._cache_lock:
+                self._index_cache.pop(tree_digest, None)
+            return
         ptr = self.store.get_meta(key)
         if ptr is not None and self.store.has_blob(ptr["blob"]):
             return  # pointer must not satisfy us if the blob was GC'd
+        if manifest is None:
+            manifest = self.get_manifest(tree_digest)
         idx = AttributeIndex.build(manifest.entries())
         ref = self.store.put_json(idx.to_json())
         self.store.put_meta(key, {"blob": ref.digest, "v": idx.VERSION})
         with self._cache_lock:
             self._index_cache.pop(tree_digest, None)
 
-    def get_attr_index(self, tree_digest: str) -> Optional[AttributeIndex]:
-        """Load (cached) the attribute index for a tree; ``None`` for
+    def _paged_index_intact(self, ptr: dict) -> bool:
+        """A v2 pointer is valid only while the doc AND every per-page
+        index blob it names survive (a GC'd page index must trigger a
+        rebuild, not a checkout-time crash)."""
+        if not self.store.has_blob(ptr["blob"]):
+            return False
+        try:
+            doc = self.store.get_json(ptr["blob"])
+        except NotFoundError:
+            return False
+        return all(self.store.has_blob(d) for d in doc.get("pages", []))
+
+    def _fetch_index_jsons(self, digests: List[str]) -> List[dict]:
+        return self.store.get_jsons(digests)
+
+    def get_attr_index(self, tree_digest: str):
+        """Load (cached) the attribute index for a tree — a global
+        :class:`AttributeIndex` for legacy trees, a lazy
+        :class:`PagedAttributeIndex` for paged ones; ``None`` for
         pre-index commits — callers fall back to a full scan."""
         with self._cache_lock:
             if tree_digest in self._index_cache:
                 self._index_cache.move_to_end(tree_digest)
                 return self._index_cache[tree_digest]
         ptr = self.store.get_meta(self._attr_index_meta_key(tree_digest))
-        idx: Optional[AttributeIndex] = None
+        idx = None
         if ptr is not None:
             try:
-                idx = AttributeIndex.from_json(self.store.get_json(ptr["blob"]))
+                doc = self.store.get_json(ptr["blob"])
+                if int(ptr.get("v", 1)) >= PagedAttributeIndex.VERSION \
+                        or "pages" in doc:
+                    # validate now, not at plan time: a swept per-page
+                    # index blob must degrade checkout to a scan, never
+                    # crash it mid-iteration
+                    if all(self.store.has_blob(d) for d in doc["pages"]):
+                        idx = PagedAttributeIndex(self._fetch_index_jsons,
+                                                  doc["pages"],
+                                                  doc["counts"])
+                else:
+                    idx = AttributeIndex.from_json(doc)
             except NotFoundError:
                 idx = None
-        with self._cache_lock:
-            self._index_cache[tree_digest] = idx
-            while len(self._index_cache) > self._INDEX_CACHE_CAP:
-                self._index_cache.popitem(last=False)
+        self._cache_put(self._index_cache, tree_digest, idx,
+                        self._INDEX_CACHE_CAP)
         return idx
 
     # -- commits ---------------------------------------------------------------
@@ -277,6 +672,19 @@ class VersionStore:
     ) -> Commit:
         tree = self.put_manifest(manifest)
         self.ensure_attr_index(tree, manifest)
+        return self._commit_tree(dataset, tree, parents, author, message,
+                                 meta, timestamp)
+
+    def _commit_tree(
+        self,
+        dataset: str,
+        tree: str,
+        parents: Sequence[str],
+        author: str,
+        message: str,
+        meta: Optional[Mapping[str, object]] = None,
+        timestamp: Optional[float] = None,
+    ) -> Commit:
         body = {
             "dataset": dataset,
             "tree": tree,
@@ -294,6 +702,142 @@ class VersionStore:
             idx.append(ref.digest)
             self.store.put_meta(f"commits/{dataset}", idx)
         return commit
+
+    def commit_delta(
+        self,
+        dataset: str,
+        base_commit_id: str,
+        adds: Mapping[str, RecordEntry],
+        removes: Iterable[str],
+        author: str,
+        message: str,
+        meta: Optional[Mapping[str, object]] = None,
+        parents: Optional[Sequence[str]] = None,
+        timestamp: Optional[float] = None,
+    ) -> Tuple[Commit, VersionDiff, int]:
+        """Commit a delta on top of ``base`` in O(delta + touched pages).
+
+        Only pages receiving adds/removes are loaded and rewritten (split
+        when they outgrow the fanout, dropped when emptied); every other
+        page digest — and its per-page attribute index — is carried
+        verbatim from the parent directory.  Returns the commit, the
+        resulting :class:`VersionDiff` vs base (computed from the same
+        page loads, no extra passes), and the new record count.
+        """
+        parents = list(parents) if parents is not None else [base_commit_id]
+        # Normalize once: removal wins over a same-call add (the check_in
+        # contract), identically on every layout.
+        removes = set(removes)
+        if any(rid in removes for rid in adds):
+            adds = {rid: e for rid, e in adds.items() if rid not in removes}
+        base_tree = self.get_commit(base_commit_id).tree
+        directory = self.get_page_directory(base_tree)
+        if not self.page_size or directory is None:
+            # Legacy base (or legacy-writing store): materialize + rewrite.
+            manifest = self.get_manifest(base_tree).copy()
+            diff = self._delta_diff_from_map(
+                {e.record_id: e.blob.digest
+                 for e in manifest.iter_entries()}, adds, removes)
+            for entry in adds.values():
+                manifest.add(entry)
+            for rid in removes:
+                manifest.remove(rid)
+            commit = self.commit(dataset, manifest, parents, author,
+                                 message, meta, timestamp)
+            return commit, diff, len(manifest)
+
+        new_dir, diff = self._apply_delta(directory, adds, removes)
+        tree = self._put_directory(new_dir)
+        self.ensure_attr_index(tree)
+        commit = self._commit_tree(dataset, tree, parents, author, message,
+                                   meta, timestamp)
+        return commit, diff, new_dir.n
+
+    @staticmethod
+    def _delta_diff_from_map(base_digests: Mapping[str, str],
+                             adds: Mapping[str, RecordEntry],
+                             removes: Iterable[str]) -> VersionDiff:
+        d = VersionDiff()
+        removed = {rid for rid in removes if rid in base_digests}
+        for rid, entry in adds.items():
+            old = base_digests.get(rid)
+            if old is None:
+                d.added.append(rid)
+            elif old != entry.blob.digest:
+                d.modified.append(rid)
+        d.added.sort()
+        d.modified.sort()
+        d.removed = sorted(removed)
+        d.unchanged = len(base_digests) - len(d.modified) - len(removed)
+        return d
+
+    def _apply_delta(
+        self,
+        directory: PageDirectory,
+        adds: Mapping[str, RecordEntry],
+        removes: Iterable[str],
+    ) -> Tuple[PageDirectory, VersionDiff]:
+        """Page-level delta application with structural sharing."""
+        removes = set(removes)
+        touched: Dict[int, Dict[str, Optional[RecordEntry]]] = {}
+        overflow: Dict[str, RecordEntry] = {}
+        for rid, entry in adds.items():
+            pi = directory.page_for(rid)
+            if pi < 0:
+                overflow[rid] = entry
+            else:
+                touched.setdefault(pi, {})[rid] = entry
+        for rid in removes:
+            pi = directory.page_for(rid)
+            if pi >= 0:
+                touched.setdefault(pi, {}).setdefault(rid, None)
+
+        diff = VersionDiff()
+        new_pages: List[PageInfo] = []
+        for pi, page in enumerate(directory.pages):
+            changes = touched.get(pi)
+            if changes is None:
+                new_pages.append(page)  # carried verbatim — the whole point
+                continue
+            by_id = {o["id"]: o for o in self.get_page_records(page.digest)}
+            for rid, entry in changes.items():
+                old = by_id.get(rid)
+                if entry is None:  # removal
+                    if old is not None:
+                        del by_id[rid]
+                        diff.removed.append(rid)
+                    continue
+                if old is None:
+                    diff.added.append(rid)
+                elif old["blob"]["digest"] != entry.blob.digest:
+                    diff.modified.append(rid)
+                by_id[rid] = entry.to_json()
+            new_pages.extend(self._repaginate(
+                [by_id[rid] for rid in sorted(by_id)]))
+        if overflow:  # empty base directory
+            raw = [overflow[rid].to_json() for rid in sorted(overflow)]
+            new_pages.extend(self._repaginate(raw))
+            diff.added.extend(sorted(overflow))
+        diff.added.sort()
+        diff.removed.sort()
+        diff.modified.sort()
+        diff.unchanged = directory.n - len(diff.modified) - len(diff.removed)
+        return PageDirectory(new_pages, self.page_size), diff
+
+    def _repaginate(self, raw_records: List[dict]) -> List[PageInfo]:
+        """Write one touched page back, splitting if it outgrew the fanout
+        (and vanishing if it emptied)."""
+        if not raw_records:
+            return []
+        if len(raw_records) <= self._SPLIT_FACTOR * self.page_size:
+            return [self._write_page(raw_records)]
+        n_parts = -(-len(raw_records) // self.page_size)
+        out: List[PageInfo] = []
+        for i in range(n_parts):
+            lo = i * len(raw_records) // n_parts
+            hi = (i + 1) * len(raw_records) // n_parts
+            out.append(self._write_page(raw_records[lo:hi]))
+        return out
 
     def get_commit(self, commit_id: str) -> Commit:
         return Commit.from_json(commit_id, self.store.get_json(commit_id))
@@ -347,11 +891,43 @@ class VersionStore:
 
     # -- diff / merge -------------------------------------------------------------
 
+    def _unshared_digest_maps(
+        self, dir_a: PageDirectory, dir_b: PageDirectory
+    ) -> Tuple[Dict[str, str], Dict[str, str], int]:
+        """id -> payload digest maps over the *unshared* pages of two paged
+        trees, plus the record count of the shared pages.
+
+        A page digest present in both directories denotes byte-identical
+        records on both sides (and pages are contiguous runs of the sorted
+        id space, so none of its ids can reappear in an unshared page) —
+        those pages are skipped without a read."""
+        shared = dir_a.page_digests() & dir_b.page_digests()
+        n_shared = sum(p.n for p in dir_a.pages if p.digest in shared)
+
+        def collect(directory: PageDirectory) -> Dict[str, str]:
+            indices = [i for i, p in enumerate(directory.pages)
+                       if p.digest not in shared]
+            return {o["id"]: o["blob"]["digest"]
+                    for raw in self.iter_page_records(directory, indices)
+                    for o in raw}
+
+        return collect(dir_a), collect(dir_b), n_shared
+
     def diff(self, commit_a: str, commit_b: str) -> VersionDiff:
-        """What changed going a -> b.  O(records), digest comparison only."""
-        ma = self.get_manifest(self.get_commit(commit_a).tree)
-        mb = self.get_manifest(self.get_commit(commit_b).tree)
-        return diff_manifests(ma, mb)
+        """What changed going a -> b.  Paged trees compare page digests
+        first and deserialize only differing pages — O(changed pages);
+        legacy (or mixed) trees fall back to the full record walk."""
+        tree_a = self.get_commit(commit_a).tree
+        tree_b = self.get_commit(commit_b).tree
+        dir_a = self.get_page_directory(tree_a)
+        dir_b = self.get_page_directory(tree_b)
+        if dir_a is not None and dir_b is not None:
+            da, db, n_shared = self._unshared_digest_maps(dir_a, dir_b)
+            d = _diff_digest_maps(da, db)
+            d.unchanged += n_shared
+            return d
+        return diff_manifests(self.get_manifest(tree_a),
+                              self.get_manifest(tree_b))
 
     def merge_base(self, a: str, b: str) -> Optional[str]:
         """Nearest common ancestor (BFS over parents)."""
@@ -389,47 +965,70 @@ class VersionStore:
 
         A record changed on both sides to *different* blobs is a conflict
         (raised, never silently resolved — datasets are training inputs).
+        Paged trees resolve only the records living in pages the two sides
+        do not share; the result is committed as a delta on ``ours`` so
+        agreed-on pages flow through untouched.
         """
         base_id = self.merge_base(ours, theirs)
-        base = (
-            self.get_manifest(self.get_commit(base_id).tree)
-            if base_id
-            else Manifest()
-        )
-        mo = self.get_manifest(self.get_commit(ours).tree)
-        mt = self.get_manifest(self.get_commit(theirs).tree)
+        tree_o = self.get_commit(ours).tree
+        tree_t = self.get_commit(theirs).tree
+        dir_o = self.get_page_directory(tree_o)
+        dir_t = self.get_page_directory(tree_t)
+        base = (self.get_manifest(self.get_commit(base_id).tree)
+                if base_id else Manifest())
 
-        merged = mo.copy()
+        if dir_o is not None and dir_t is not None:
+            mo_part, mt_part, _ = self._unshared_digest_maps(dir_o, dir_t)
+            ids = set(mo_part) | set(mt_part)
+            mo = mt = None  # record lookups stay within the unshared maps
+        else:
+            mo = self.get_manifest(tree_o)
+            mt = self.get_manifest(tree_t)
+            ids = set(mo.record_ids()) | set(mt.record_ids()) \
+                | set(base.record_ids())
+            mo_part = {e.record_id: e.blob.digest for e in mo.iter_entries()}
+            mt_part = {e.record_id: e.blob.digest for e in mt.iter_entries()}
+
+        adds: Dict[str, RecordEntry] = {}
+        removes: List[str] = []
         conflicts: List[str] = []
-        all_ids = set(base.record_ids()) | set(mo.record_ids()) | set(mt.record_ids())
-        for rid in sorted(all_ids):
-            eb, eo, et = base.get(rid), mo.get(rid), mt.get(rid)
+        theirs_man: Optional[Manifest] = mt
+        for rid in sorted(ids):
+            eb = base.get(rid)
             db = eb.blob.digest if eb else None
-            do = eo.blob.digest if eo else None
-            dt = et.blob.digest if et else None
+            do = mo_part.get(rid)
+            dt = mt_part.get(rid)
             if do == dt:
                 continue  # same on both sides (incl. both deleted)
             if dt == db:
-                continue  # theirs untouched -> keep ours (already in merged)
+                continue  # theirs untouched -> keep ours
             if do == db:
                 # ours untouched -> take theirs
-                if et is None:
-                    merged.remove(rid)
+                if dt is None:
+                    removes.append(rid)
                 else:
-                    merged.add(et)
+                    if theirs_man is None:
+                        theirs_man = self.get_manifest(tree_t)
+                    adds[rid] = theirs_man.get(rid)  # type: ignore[assignment]
                 continue
             conflicts.append(rid)
         if conflicts:
             raise MergeConflict(conflicts)
-        return self.commit(
-            dataset, merged, parents=[ours, theirs], author=author, message=message
-        )
+        commit, _, _ = self.commit_delta(
+            dataset, ours, adds, removes, author=author, message=message,
+            parents=[ours, theirs])
+        return commit
 
     # -- GC roots -----------------------------------------------------------------
 
     def live_digests(self, dataset: str) -> List[str]:
-        """Top-level digests kept alive by this dataset's history."""
+        """Top-level digests kept alive by this dataset's history.
+
+        Page-granular: each distinct page is expanded exactly once no
+        matter how many commits share it, so the root walk itself costs
+        O(distinct pages), not O(commits × records)."""
         out: List[str] = []
+        seen_pages: Set[str] = set()
         for cid in self.list_commits(dataset):
             out.append(cid)
             try:
@@ -437,14 +1036,31 @@ class VersionStore:
             except NotFoundError:
                 continue
             out.append(c.tree)
-            # the tree's attribute index blob is owned by the commit too —
-            # without this root, the first gc() would sweep every index and
-            # degrade all filtered checkouts to full scans permanently
+            # the tree's attribute index blobs are owned by the commit too —
+            # without these roots, the first gc() would sweep every index
+            # and degrade all filtered checkouts to full scans permanently
             ptr = self.store.get_meta(self._attr_index_meta_key(c.tree))
             if ptr is not None:
                 out.append(ptr["blob"])
-            for e in self.get_manifest(c.tree).entries():
-                out.append(e.blob.digest)
+            try:
+                directory = self.get_page_directory(c.tree)
+            except NotFoundError:
+                continue
+            if directory is None:
+                for e in self.get_manifest(c.tree).entries():
+                    out.append(e.blob.digest)
+                continue
+            for page in directory.pages:
+                if page.digest in seen_pages:
+                    continue
+                seen_pages.add(page.digest)
+                out.append(page.digest)
+                pidx = self.store.get_meta(
+                    self._page_index_meta_key(page.digest))
+                if pidx is not None:
+                    out.append(pidx["blob"])
+                for o in self.get_page_records(page.digest):
+                    out.append(o["blob"]["digest"])
         return out
 
 
@@ -461,14 +1077,21 @@ def raw_entry_matches(raw: dict, entry: RecordEntry) -> bool:
             and raw.get("attrs", {}) == entry.attrs)
 
 
-def diff_manifests(ma: Manifest, mb: Manifest) -> VersionDiff:
+def _diff_digest_maps(da: Mapping[str, str],
+                      db: Mapping[str, str]) -> VersionDiff:
     d = VersionDiff()
-    ids_a, ids_b = set(ma.record_ids()), set(mb.record_ids())
+    ids_a, ids_b = set(da), set(db)
     d.added = sorted(ids_b - ids_a)
     d.removed = sorted(ids_a - ids_b)
     for rid in sorted(ids_a & ids_b):
-        if ma.get(rid).blob.digest != mb.get(rid).blob.digest:  # type: ignore[union-attr]
+        if da[rid] != db[rid]:
             d.modified.append(rid)
         else:
             d.unchanged += 1
     return d
+
+
+def diff_manifests(ma: Manifest, mb: Manifest) -> VersionDiff:
+    return _diff_digest_maps(
+        {e.record_id: e.blob.digest for e in ma.iter_entries()},
+        {e.record_id: e.blob.digest for e in mb.iter_entries()})

@@ -91,6 +91,7 @@ class Platform:
         worker_slots: int = 8,
         acl: Optional[AccessController] = None,
         lineage: Optional[LineageGraph] = None,
+        page_size: Optional[int] = None,
         **store_kwargs,
     ) -> "Platform":
         """Open (or create) a platform over ``target``.
@@ -100,14 +101,20 @@ class Platform:
         - ``StorageBackend``  → wrapped in an :class:`ObjectStore`
         - ``ObjectStore``     → used as-is
         - ``DatasetManager``  → wrapped directly (compat path)
+
+        ``page_size`` sets the manifest page fanout (``0`` = legacy
+        monolithic manifests — the measurable baseline; reads always
+        accept both layouts).
         """
         if isinstance(target, DatasetManager):
             # The manager already owns its ACL/lineage/store — accepting
             # overrides here would silently not apply them.
-            if acl is not None or lineage is not None or store_kwargs:
+            if acl is not None or lineage is not None or store_kwargs \
+                    or page_size is not None:
                 raise ValueError(
-                    "acl=/lineage=/store kwargs cannot be combined with an "
-                    "existing DatasetManager — configure the manager itself")
+                    "acl=/lineage=/page_size=/store kwargs cannot be "
+                    "combined with an existing DatasetManager — configure "
+                    "the manager itself")
             manager = target
         else:
             if target is None:
@@ -127,7 +134,8 @@ class Platform:
             else:
                 raise TypeError(
                     f"cannot open a Platform over {type(target).__name__}")
-            manager = DatasetManager(store, acl=acl, lineage=lineage)
+            manager = DatasetManager(store, acl=acl, lineage=lineage,
+                                     page_size=page_size)
         return cls(manager, actor=actor, worker_slots=worker_slots)
 
     def _actor(self, actor: Optional[str]) -> str:
@@ -283,6 +291,19 @@ class DatasetHandle:
         tree = self.versions.get_commit(commit_id).tree
         index = self.versions.get_attr_index(tree)
         return index.stats() if index is not None else None
+
+    def page_stats(self, rev: str = "main",
+                   actor: Optional[str] = None) -> Optional[dict]:
+        """Page-directory shape + per-page attribute summaries for one
+        version (``None`` for legacy monolithic manifests): page count and
+        fanout, and per page its record count, key range, and the
+        attr/zone summary quality tooling reads without loading pages."""
+        self._dm.acl.check(self._actor(actor), "READ", self.name,
+                           note=f"page_stats:{rev}")
+        commit_id = self.versions.resolve(self.name, rev)
+        tree = self.versions.get_commit(commit_id).tree
+        directory = self.versions.get_page_directory(tree)
+        return directory.stats() if directory is not None else None
 
     def checkout(
         self,

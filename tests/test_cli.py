@@ -72,3 +72,65 @@ def test_gc_after_revoke(repo, files, capsys):
     main(["--repo", repo, "check-in", "ds", *files])
     main(["--repo", repo, "revoke", "file0.txt"])
     assert main(["--repo", repo, "gc"]) == 0
+
+
+def _seed_cache(repo, n_slots=2):
+    """Two derivations of the same (query, pipeline, output) group against
+    successive input commits — the second supersedes the first."""
+    from repro.core import MapComponent, Pipeline, Record
+    from repro.platform import Platform
+
+    def upper(rec):
+        return Record(rec.record_id, rec.data.upper(), dict(rec.attrs))
+
+    pipe = Pipeline([MapComponent(upper, name="upper")], name="up")
+    plat = Platform.open(repo, actor="cli")
+    ds = plat.dataset("src")
+    ds.check_in([Record(f"r{i}", b"x%d" % i, {"i": i}) for i in range(6)])
+    ds.derive(pipe, output="out")
+    if n_slots > 1:
+        ds.check_in([Record("r0", b"changed", {"i": 0})])
+        ds.derive(pipe, output="out")
+    return pipe
+
+
+def test_cache_ls_and_stats(repo, capsys):
+    _seed_cache(repo)
+    assert main(["--repo", repo, "cache", "ls"]) == 0
+    out = capsys.readouterr().out
+    lines = out.strip().splitlines()
+    assert lines[0].startswith("key,output_dataset,output_commit")
+    assert len(lines) == 3  # header + two slots
+    assert all(",out," in line for line in lines[1:])
+
+    assert main(["--repo", repo, "cache", "stats"]) == 0
+    out = capsys.readouterr().out
+    assert "slots 2" in out
+    assert "groups 1" in out
+    assert "superseded 1" in out
+
+
+def test_cache_prune_keeps_latest_and_gcs(repo, capsys):
+    pipe = _seed_cache(repo)
+    assert main(["--repo", repo, "cache", "prune", "--keep-latest", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "pruned 1 superseded slot(s)" in out
+
+    assert main(["--repo", repo, "cache", "stats"]) == 0
+    assert "slots 1" in capsys.readouterr().out
+
+    # the surviving slot still serves: a fresh process cache-hits, and the
+    # gc that prune ran must not have swept anything the hit needs
+    from repro.platform import Platform
+
+    plat = Platform.open(repo, actor="cli")
+    res = plat.dataset("src").derive(pipe, output="out")
+    assert res.cache_hit
+
+
+def test_cache_empty_ls(repo, capsys):
+    from repro.platform import Platform
+
+    Platform.open(repo, actor="cli")  # create the repository directory
+    assert main(["--repo", repo, "cache", "ls"]) == 0
+    assert "empty" in capsys.readouterr().out

@@ -647,3 +647,125 @@ def test_sharding_does_not_change_output():
                    update_cache=False,
                    policy=ExecPolicy(n_shards=7, batch_records=2))
     assert r1.content_digest == r7.content_digest
+
+
+# -- component code fingerprints (edited-in-place transforms bust caches) ----
+
+
+def _mk_map(fn, name="stage"):
+    from repro.core import MapComponent
+
+    return Pipeline([MapComponent(fn, name=name)], name="p")
+
+
+def test_fingerprint_covers_function_body():
+    def fn_a(rec):
+        return Record(rec.record_id, rec.data + b"-A", dict(rec.attrs))
+
+    def fn_b(rec):
+        return Record(rec.record_id, rec.data + b"-B", dict(rec.attrs))
+
+    def fn_a_clone(rec):  # identical body, distinct function object
+        return Record(rec.record_id, rec.data + b"-A", dict(rec.attrs))
+
+    assert _mk_map(fn_a).fingerprint() != _mk_map(fn_b).fingerprint()
+    assert _mk_map(fn_a).fingerprint() == _mk_map(fn_a_clone).fingerprint()
+
+
+def test_fingerprint_covers_closure_values():
+    def make(tag):
+        def fn(rec):
+            return Record(rec.record_id, rec.data + tag, dict(rec.attrs))
+
+        return _mk_map(fn)
+
+    # same bytecode, different captured constant -> different identity
+    assert make(b"-x").fingerprint() != make(b"-y").fingerprint()
+    assert make(b"-x").fingerprint() == make(b"-x").fingerprint()
+
+
+def test_edited_map_fn_forces_recompute():
+    """ROADMAP open item: editing a Map fn in place (same component name!)
+    must change the pipeline fingerprint and recompute instead of silently
+    serving the stale cached derivation."""
+    plat = Platform.open(actor="t")
+    ds = plat.dataset("src")
+    ds.check_in(seed_records(8))
+    calls = {"n": 0}
+
+    def fn_v1(rec):
+        calls["n"] += 1
+        return Record(rec.record_id, rec.data + b" v1", dict(rec.attrs))
+
+    r1 = ds.derive(_mk_map(fn_v1), output="out")
+    assert not r1.cache_hit and calls["n"] == 8
+
+    # unchanged body -> cache hit, zero executions
+    r1b = ds.derive(_mk_map(fn_v1), output="out")
+    assert r1b.cache_hit and calls["n"] == 8
+    assert r1b.output_commit == r1.output_commit
+
+    def fn_v2(rec):  # the "edited in place" transform: same name, new body
+        calls["n"] += 1
+        return Record(rec.record_id, rec.data + b" v2", dict(rec.attrs))
+
+    r2 = ds.derive(_mk_map(fn_v2), output="out")
+    assert not r2.cache_hit and calls["n"] == 16
+    assert r2.key != r1.key
+    assert r2.content_digest != r1.content_digest
+
+
+def test_filter_pred_participates_in_fingerprint():
+    from repro.core import FilterComponent
+
+    def keep_even(rec):
+        return rec.attrs["i"] % 2 == 0
+
+    def keep_odd(rec):
+        return rec.attrs["i"] % 2 == 1
+
+    pa = Pipeline([FilterComponent(keep_even, name="f")], name="p")
+    pb = Pipeline([FilterComponent(keep_odd, name="f")], name="p")
+    assert pa.fingerprint() != pb.fingerprint()
+
+
+def test_library_component_fingerprints_ignore_no_code():
+    # components without wrapped callables fingerprint on (type, name,
+    # config) exactly as before — their behavior is their type
+    from repro.data import TokenizeComponent
+
+    assert TokenizeComponent().fingerprint() == \
+        TokenizeComponent().fingerprint()
+
+
+def test_fingerprint_frozenset_consts_are_order_free():
+    # `in {...}` literals compile to frozenset consts whose iteration
+    # order depends on per-process hash randomization; the fingerprint
+    # hashes sorted element digests so identical source stays identical
+    def fa(rec):
+        return rec if rec.record_id in {"alpha", "beta", "gamma"} else rec
+
+    def fb(rec):
+        return rec if rec.record_id in {"alpha", "beta", "gamma"} else rec
+
+    def fc(rec):
+        return rec if rec.record_id in {"alpha", "beta", "DELTA"} else rec
+
+    assert _mk_map(fa).fingerprint() == _mk_map(fb).fingerprint()
+    assert _mk_map(fa).fingerprint() != _mk_map(fc).fingerprint()
+
+
+def test_fingerprint_stable_across_mutation_of_captured_counters():
+    # mutable captured state (stats counters etc.) changes while a
+    # pipeline runs; it must NOT participate in the identity, or every
+    # execution would mint a new fingerprint and the cache would never hit
+    calls = {"n": 0}
+
+    def fn(rec):
+        calls["n"] += 1
+        return rec
+
+    pipe = _mk_map(fn)
+    before = pipe.fingerprint()
+    calls["n"] = 999
+    assert pipe.fingerprint() == before

@@ -1,0 +1,446 @@
+"""Paged merkle manifests: paged ≡ monolithic, O(delta) commits, pages.
+
+The page tree is an *encoding* of the manifest — every observable surface
+(checkout under all 21 index-matrix queries, diff, three-way merge,
+derivations, loader batch streams) must be byte-identical between the
+paged layout and the legacy monolithic blob, pre-existing monolithic
+repositories must keep working via migrate-on-read, and a small delta on a
+big dataset must write only the touched pages + directory.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.core import (MapComponent, MemoryBackend, ObjectStore, Pipeline,
+                        Record)
+from repro.core.query import attr
+from repro.core.versioning import (Manifest, MergeConflict, RecordEntry,
+                                   VersionStore)
+from repro.data import ShardedSnapshotLoader
+from repro.platform import Platform
+from test_attr_index import QUERY_MATRIX
+from test_loader_golden import _batch_digest, _packed_record
+
+PAGE = 16  # small fanout so the 600-record fixture spans ~38 pages
+
+
+def _fixture_records(n=600):
+    """Same attr scheme as the attribute-index fixture (absent fields,
+    explicit None, mixed types, list attrs)."""
+    recs = []
+    for i in range(n):
+        attrs = {
+            "i": i,
+            "lang": ["en", "fr", "de", "ja"][i % 4],
+            "golden": i % 100 == 0,
+            "tags": ["a", "b"] if i % 7 == 0 else ["c"],
+            "score": i / n,
+        }
+        if i % 13 == 0:
+            attrs.pop("lang")
+        if i % 17 == 0:
+            attrs["note"] = None
+        if i == 42:
+            attrs["mixed"] = "str"
+        elif i % 2 == 0:
+            attrs["mixed"] = i
+        recs.append(Record(f"r{i:04d}", b"payload-%d" % i, attrs))
+    return recs
+
+
+def _delta_records():
+    """Modify / add / leave-unchanged mix applied on top of the fixture."""
+    return ([Record(f"r{i:04d}", b"REWRITTEN-%d" % i,
+                    {"i": i, "lang": "en", "score": 2.0}) for i in (3, 77)]
+            + [Record(f"s{i:04d}", b"new-%d" % i, {"i": 1000 + i,
+                                                   "lang": "de"})
+               for i in range(5)]
+            + [Record("r0004", b"payload-4",
+                      {"i": 4, "lang": "en", "golden": False,
+                       "tags": ["c"], "score": 4 / 600, "mixed": 4})])
+
+
+@pytest.fixture(scope="module")
+def pair():
+    paged = Platform.open(actor="t", page_size=PAGE)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = _fixture_records()
+    paged.dataset("d").check_in(recs)
+    mono.dataset("d").check_in(recs)
+    return paged, mono
+
+
+def _pairs(plan):
+    return [(e.record_id, e.blob.digest, dict(e.attrs))
+            for e in plan.entries()]
+
+
+def test_layouts_actually_differ(pair):
+    paged, mono = pair
+    tree_p = paged.versions.get_commit(
+        paged.versions.resolve("d", "main")).tree
+    tree_m = mono.versions.get_commit(mono.versions.resolve("d", "main")).tree
+    dir_p = paged.versions.get_page_directory(tree_p)
+    assert dir_p is not None and len(dir_p.pages) == -(-600 // PAGE)
+    assert dir_p.n == 600
+    assert mono.versions.get_page_directory(tree_m) is None
+
+
+@pytest.mark.parametrize("q", QUERY_MATRIX, ids=range(len(QUERY_MATRIX)))
+def test_query_matrix_byte_identical(pair, q):
+    paged, mono = pair
+    want = _pairs(mono.dataset("d").plan(where=q, use_index=False))
+    assert _pairs(mono.dataset("d").plan(where=q)) == want
+    assert _pairs(paged.dataset("d").plan(where=q)) == want
+    assert _pairs(paged.dataset("d").plan(where=q,
+                                          use_index=False)) == want
+
+
+@pytest.mark.parametrize("shard", [None, (1, 3)])
+@pytest.mark.parametrize("limit", [None, 17])
+def test_shard_and_limit_byte_identical(pair, shard, limit):
+    paged, mono = pair
+    for q in (attr("lang") == "en", attr("score") >= 0.5):
+        want = _pairs(mono.manager.plan_checkout(
+            "d", "t", where=q, shard=shard, limit=limit, use_index=False))
+        assert _pairs(paged.manager.plan_checkout(
+            "d", "t", where=q, shard=shard, limit=limit)) == want
+        assert _pairs(paged.manager.plan_checkout(
+            "d", "t", where=q, shard=shard, limit=limit,
+            use_index=False)) == want
+
+
+def test_index_stats_equivalent(pair):
+    paged, mono = pair
+    sp = paged.dataset("d").index_stats()
+    sm = mono.dataset("d").index_stats()
+    assert sp["n_records"] == sm["n_records"] == 600
+    for f, want in sm["fields"].items():
+        got = sp["fields"][f]
+        assert got["present"] == want["present"], f
+        # cardinality caps apply per page, so the paged index may keep
+        # postings for fields the global index dropped (e.g. "i": 600
+        # distinct values globally, <= PAGE per page) — it must never be
+        # *less* capable, and zone coverage must match exactly
+        want_modes = set((want["indexed"] or "").split("+")) - {""}
+        got_modes = set((got["indexed"] or "").split("+")) - {""}
+        assert want_modes <= got_modes, f
+        assert ("zones" in got_modes) == ("zones" in want_modes), f
+        if want["values"] is not None and got["values"] is not None:
+            assert got["values"] == want["values"], f
+
+
+def test_diff_byte_identical():
+    # fresh platforms: this test moves heads, the shared fixture must not
+    paged = Platform.open(actor="t", page_size=PAGE)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = _fixture_records()
+    paged.dataset("d").check_in(recs)
+    mono.dataset("d").check_in(recs)
+    diffs = {}
+    for name, plat in (("paged", paged), ("mono", mono)):
+        base = plat.versions.resolve("d", "main")
+        plat.dataset("d").check_in(_delta_records(),
+                                   remove_ids=["r0111", "r0500"],
+                                   message="delta")
+        head = plat.versions.resolve("d", "main")
+        diffs[name] = (plat.versions.diff(base, head),
+                       plat.versions.diff(head, base))
+    for fwd_or_back in (0, 1):
+        dp, dm = diffs["paged"][fwd_or_back], diffs["mono"][fwd_or_back]
+        assert dp.added == dm.added
+        assert dp.removed == dm.removed
+        assert dp.modified == dm.modified
+        assert dp.unchanged == dm.unchanged
+        assert dp.summary() == dm.summary()
+    # sanity: the delta really exercised every diff bucket
+    d = diffs["paged"][0]
+    assert d.added == [f"s{i:04d}" for i in range(5)]
+    assert d.removed == ["r0111", "r0500"]
+    assert d.modified == ["r0003", "r0077"]  # r0004 rewrote identically
+
+
+def _entry(vs, rid, payload):
+    return RecordEntry(rid, vs.store.put_blob(payload), {"len": len(payload)})
+
+
+def _merge_fixture(page_size):
+    vs = VersionStore(ObjectStore(MemoryBackend()), page_size=page_size)
+    base_m = Manifest([_entry(vs, f"k{i:03d}", b"base-%d" % i)
+                       for i in range(40)])
+    base = vs.commit("ds", base_m, [], "u", "base")
+    mo = base_m.copy()
+    mo.add(_entry(vs, "k001", b"ours-change"))
+    mo.remove("k010")
+    ours = vs.commit("ds", mo, [base.commit_id], "u", "ours")
+    mt = base_m.copy()
+    mt.add(_entry(vs, "k030", b"theirs-change"))
+    mt.add(_entry(vs, "zz-new", b"theirs-new"))
+    theirs = vs.commit("ds", mt, [base.commit_id], "u", "theirs")
+    return vs, ours, theirs
+
+
+@pytest.mark.parametrize("page_size", [0, 8])
+def test_merge_result_identical_across_layouts(page_size):
+    vs, ours, theirs = _merge_fixture(page_size)
+    merged = vs.merge("ds", ours.commit_id, theirs.commit_id, "u")
+    man = vs.get_manifest(merged.tree)
+    want_ids = sorted([f"k{i:03d}" for i in range(40) if i != 10]
+                      + ["zz-new"])
+    assert man.record_ids() == want_ids
+    assert vs.store.get_blob(man.get("k001").blob) == b"ours-change"
+    assert vs.store.get_blob(man.get("k030").blob) == b"theirs-change"
+    assert vs.store.get_blob(man.get("zz-new").blob) == b"theirs-new"
+    assert merged.parents == (ours.commit_id, theirs.commit_id)
+
+
+@pytest.mark.parametrize("page_size", [0, 8])
+def test_merge_conflict_parity(page_size):
+    vs, ours, theirs = _merge_fixture(page_size)
+    # both sides now change k005 to different payloads
+    mo = vs.get_manifest(vs.get_commit(ours.commit_id).tree).copy()
+    mo.add(_entry(vs, "k005", b"ours-k005"))
+    ours2 = vs.commit("ds", mo, [ours.commit_id], "u", "o2")
+    mt = vs.get_manifest(vs.get_commit(theirs.commit_id).tree).copy()
+    mt.add(_entry(vs, "k005", b"theirs-k005"))
+    theirs2 = vs.commit("ds", mt, [theirs.commit_id], "u", "t2")
+    with pytest.raises(MergeConflict) as ei:
+        vs.merge("ds", ours2.commit_id, theirs2.commit_id, "u")
+    assert ei.value.record_ids == ["k005"]
+
+
+def _derive_pipeline():
+    def upper(rec):
+        return Record(rec.record_id, rec.data.upper(), dict(rec.attrs))
+
+    return Pipeline([MapComponent(upper, name="upper")], name="up")
+
+
+def test_derivation_byte_identical_and_page_incremental():
+    paged = Platform.open(actor="t", page_size=PAGE)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = _fixture_records(200)
+    q = attr("lang") == "en"
+    results = {}
+    for name, plat in (("paged", paged), ("mono", mono)):
+        plat.dataset("d").check_in(recs)
+        results[name] = plat.dataset("d").derive(_derive_pipeline(),
+                                                 output="out", where=q)
+    rp, rm = results["paged"], results["mono"]
+    # the derivation key inputs besides the commit id are layout-blind...
+    qd_p = paged.dataset("d").plan(where=q).query_digest()
+    qd_m = mono.dataset("d").plan(where=q).query_digest()
+    assert qd_p == qd_m
+    assert rp.pipeline == rm.pipeline
+    # ...and the derived datasets are byte-identical
+    assert rp.n_inputs == rm.n_inputs > 0
+    assert rp.n_outputs == rm.n_outputs
+    assert rp.content_digest == rm.content_digest
+
+    # small delta: the paged incremental run must only compare records in
+    # unshared pages yet stay byte-identical to the mono run
+    for plat in (paged, mono):
+        plat.dataset("d").check_in(
+            [Record("r0002", b"CHANGED", {"i": 2, "lang": "en"})],
+            message="delta")
+    r2p = paged.dataset("d").derive(_derive_pipeline(), output="out",
+                                    where=q)
+    r2m = mono.dataset("d").derive(_derive_pipeline(), output="out",
+                                   where=q)
+    assert r2p.incremental and r2p.n_executed == 1
+    assert r2p.content_digest == r2m.content_digest
+    cold = paged.dataset("d").derive(_derive_pipeline(), output="out-cold",
+                                     where=q, use_cache=False,
+                                     incremental=False, update_cache=False)
+    assert r2p.content_digest == cold.content_digest
+
+
+def test_loader_batches_byte_identical_across_layouts():
+    paged = Platform.open(actor="t", page_size=PAGE)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = [_packed_record(i) for i in range(96)]
+    paged.dataset("g").check_in(recs)
+    mono.dataset("g").check_in(recs)
+    lp = ShardedSnapshotLoader(paged.dataset("g").plan(), batch_size=8,
+                               seq_len=16, seed=7)
+    lm = ShardedSnapshotLoader(mono.dataset("g").plan(), batch_size=8,
+                               seq_len=16, seed=7)
+    assert lp._content == lm._content  # snapshot digest pins the order
+    for _ in range(96 // 8 + 2):  # cross the epoch boundary
+        assert _batch_digest(lp.next_batch()) == _batch_digest(lm.next_batch())
+
+
+def test_migrate_on_read_from_legacy_repo(tmp_path):
+    repo = str(tmp_path / "repo")
+    legacy = Platform.open(repo, actor="t", page_size=0)
+    legacy.dataset("d").check_in(_fixture_records(80))
+    legacy_head = legacy.versions.resolve("d", "main")
+    want = _pairs(legacy.dataset("d").plan(where=attr("lang") == "en"))
+
+    # a default (paged) process over the same repository reads it all
+    plat = Platform.open(repo, actor="t")
+    assert plat.versions.get_page_directory(
+        plat.versions.get_commit(legacy_head).tree) is None
+    assert _pairs(plat.dataset("d").plan(where=attr("lang") == "en")) == want
+    assert plat.dataset("d").page_stats() is None  # legacy head: no pages
+
+    # the next commit migrates: new tree is paged, old one stays readable,
+    # and the mixed-layout diff still works
+    plat.dataset("d").check_in([Record("zz", b"new", {"lang": "en"})])
+    head = plat.versions.resolve("d", "main")
+    assert plat.versions.get_page_directory(
+        plat.versions.get_commit(head).tree) is not None
+    assert plat.dataset("d").page_stats()["n_records"] == 81
+    d = plat.versions.diff(legacy_head, head)
+    assert d.added == ["zz"] and not d.removed and not d.modified
+    assert _pairs(plat.dataset("d").plan(rev=legacy_head,
+                                         where=attr("lang") == "en")) == want
+    got = _pairs(plat.dataset("d").plan(where=attr("lang") == "en"))
+    assert got == want + [("zz", got[-1][1], {"lang": "en"})]
+
+
+def test_small_delta_writes_only_changed_pages():
+    """The acceptance criterion: a small append writes the touched pages +
+    directory (+ its per-page index), not the dataset."""
+    paged = Platform.open(actor="t", page_size=64)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = _fixture_records(2000)
+    delta = [Record(f"zz{i:03d}", b"delta-%d" % i, {"i": 5000 + i})
+             for i in range(20)]
+    paged.dataset("d").check_in(recs)
+    mono.dataset("d").check_in(recs)
+    base_dir = paged.versions.get_page_directory(
+        paged.versions.get_commit(paged.versions.resolve("d", "main")).tree)
+
+    def writes(plat):
+        puts0 = plat.store.stats.puts
+        bytes0 = plat.store.stats.bytes_stored
+        plat.dataset("d").check_in(delta, message="delta")
+        return (plat.store.stats.puts - puts0,
+                plat.store.stats.bytes_stored - bytes0)
+
+    paged_puts, paged_bytes = writes(paged)
+    mono_puts, mono_bytes = writes(mono)
+
+    head_dir = paged.versions.get_page_directory(
+        paged.versions.get_commit(paged.versions.resolve("d", "main")).tree)
+    shared = base_dir.page_digests() & head_dir.page_digests()
+    # structural sharing: every page but the appended-to tail is reused
+    assert len(shared) == len(base_dir.pages) - 1
+    assert head_dir.n == 2020
+    # writes: 20 payloads + rewritten tail page + directory + tail page
+    # index + index pointer doc + commit body — and nothing else
+    assert paged_puts <= len(delta) + 6
+    # the monolithic baseline re-serializes the whole manifest + index
+    # (more bytes in fewer, larger puts)
+    assert mono_puts >= len(delta) + 3
+    assert mono_bytes > 10 * paged_bytes
+
+
+def test_deep_modification_touches_one_page():
+    plat = Platform.open(actor="t", page_size=32)
+    plat.dataset("d").check_in(_fixture_records(320))
+    vs = plat.versions
+    d0 = vs.get_page_directory(vs.get_commit(vs.resolve("d", "main")).tree)
+    plat.dataset("d").check_in(
+        [Record("r0100", b"CHANGED", {"i": 100})], message="edit")
+    d1 = vs.get_page_directory(vs.get_commit(vs.resolve("d", "main")).tree)
+    assert len(d0.pages) == len(d1.pages) == 10
+    changed = [i for i, (a, b) in enumerate(zip(d0.pages, d1.pages))
+               if a.digest != b.digest]
+    assert len(changed) == 1
+    assert d0.pages[changed[0]].lo <= "r0100" <= d0.pages[changed[0]].hi
+
+
+def test_explain_reports_page_pruning(pair):
+    paged, _ = pair
+    ds = paged.dataset("d")
+    # selective indexed query: candidate-free pages are never scanned
+    plan = ds.plan(where=(attr("lang") == "en") & (attr("golden") == True))  # noqa: E712
+    entries = plan.entries()
+    ex = plan.explain()
+    assert ex["mode"] == "indexed" and ex["exact"] is True
+    assert ex["candidates"] == len(entries)
+    assert ex["pages_total"] == -(-600 // PAGE)
+    assert 0 < ex["pages_scanned"] < ex["pages_total"]
+    # full scan touches every page...
+    scan = ds.plan(where=attr("lang") == "en", use_index=False)
+    scan.entries()
+    assert scan.explain()["pages_scanned"] == scan.explain()["pages_total"]
+    # ...unless a limit stops the page stream early
+    lim = ds.plan(limit=5)
+    lim.entries()
+    assert lim.explain()["pages_scanned"] < lim.explain()["pages_total"]
+
+
+def test_page_stats_summaries(pair):
+    paged, _ = pair
+    stats = paged.dataset("d").page_stats()
+    assert stats["n_records"] == 600
+    assert stats["n_pages"] == -(-600 // PAGE)
+    assert stats["page_size"] == PAGE
+    total = 0
+    prev_hi = ""
+    for page in stats["pages"]:
+        assert prev_hi < page["lo"] <= page["hi"]
+        prev_hi = page["hi"]
+        total += page["n"]
+        summary = page["summary"]
+        assert summary["i"]["present"] == page["n"]
+        assert summary["i"]["min"] >= 0
+        assert summary["score"]["max"] <= 1.0
+    assert total == 600
+
+
+def test_gc_keeps_pages_and_page_indexes(tmp_path):
+    repo = str(tmp_path / "repo")
+    plat = Platform.open(repo, actor="t", page_size=16)
+    plat.dataset("d").check_in(_fixture_records(100))
+    plat.dataset("d").check_in(
+        [Record("r0000", b"v2", {"i": 0, "lang": "en"})], message="edit")
+    assert plat.gc() == 0  # nothing live may be swept
+    plat2 = Platform.open(repo, actor="t")
+    plan = plat2.dataset("d").plan(where=attr("lang") == "en")
+    assert plan.explain()["mode"] == "indexed"
+    want = _pairs(plat2.dataset("d").plan(where=attr("lang") == "en",
+                                          use_index=False))
+    assert _pairs(plan) == want
+    # history (the pre-edit tree's pages) survived too
+    first = plat2.versions.list_commits("d")[0]
+    assert len(plat2.versions.get_manifest(
+        plat2.versions.get_commit(first).tree)) == 100
+
+
+def test_content_digest_layout_blind(pair):
+    paged, mono = pair
+    hp = hashlib.sha256()
+    hm = hashlib.sha256()
+    for plat, h in ((paged, hp), (mono, hm)):
+        for e in plat.dataset("d").plan(rev=plat.versions.list_commits(
+                "d")[0]).iter_entries():
+            h.update(e.record_id.encode())
+            h.update(e.blob.digest.encode())
+    assert hp.hexdigest() == hm.hexdigest()
+
+
+@pytest.mark.parametrize("page_size", [0, 8])
+def test_commit_delta_add_remove_overlap_parity(page_size):
+    """A record id in both adds and removes resolves identically on every
+    layout: removal wins (the check_in contract), and the diff never
+    reports the id twice."""
+    vs = VersionStore(ObjectStore(MemoryBackend()), page_size=page_size)
+    base_m = Manifest([_entry(vs, f"k{i}", b"v%d" % i) for i in range(6)])
+    base = vs.commit("ds", base_m, [], "u", "base")
+    commit, diff, n = vs.commit_delta(
+        "ds", base.commit_id,
+        adds={"k1": _entry(vs, "k1", b"NEW"), "k9": _entry(vs, "k9", b"9")},
+        removes=["k1"], author="u", message="overlap")
+    man = vs.get_manifest(commit.tree)
+    assert "k1" not in man
+    assert "k9" in man
+    assert n == len(man) == 6
+    assert diff.removed == ["k1"]
+    assert diff.added == ["k9"]
+    assert diff.modified == []
+    assert diff.unchanged == 5
