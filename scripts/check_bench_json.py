@@ -14,6 +14,10 @@ import sys
 SCHEMA = 1
 REQUIRED_ROWS = {
     "platform": (
+        "checkin_throughput",
+        "checkin_dedup_cold",
+        "checkin_dedup_recheckin",
+        "put_blobs_vs_loop",
         "checkout_filtered_scan",
         "checkout_filtered_indexed",
         "cas_read_all_nocache",
@@ -32,19 +36,22 @@ REQUIRED_ROWS = {
 REQUIRED_METRICS = {
     "platform": ("checkout_filtered_speedup", "cas_cache_hits",
                  "derive_cached_speedup", "derive_incremental_speedup",
-                 "commit_delta_speedup", "diff_large_speedup"),
+                 "commit_delta_speedup", "diff_large_speedup",
+                 "checkin_dedup_speedup"),
     "loader": ("loader_steady_state_speedup",),
 }
 # Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
-# committed trajectory must show cached ≫ cold, incremental ≫ cold, and
-# paged manifests ≫ the monolithic baseline; smoke runs get a lower floor
-# so loaded CI machines don't flake.
+# committed trajectory must show cached ≫ cold, incremental ≫ cold, paged
+# manifests ≫ the monolithic baseline, and a fully-deduplicated
+# re-check-in ≫ a cold ingest; smoke runs get a lower floor so loaded CI
+# machines don't flake.
 RATIO_FLOORS = {
     "platform": {
         "derive_cached_speedup": (10.0, 3.0),
         "derive_incremental_speedup": (10.0, 3.0),
         "commit_delta_speedup": (10.0, 3.0),
         "diff_large_speedup": (10.0, 3.0),
+        "checkin_dedup_speedup": (10.0, 3.0),
     },
 }
 

@@ -23,7 +23,10 @@ PYTHONPATH=src python benchmarks/loader_bench.py --smoke --json "$SMOKE_JSON"
 
 echo "== bench contract =="
 # the smoke run just produced one document; the committed repo-root file
-# (non-smoke trajectory) must exist and satisfy the same contract
+# (non-smoke trajectory) must exist and satisfy the same contract —
+# including the ingest rows (checkin_throughput / checkin_dedup_* /
+# put_blobs_vs_loop) and the checkin_dedup_speedup floor (>=10x, >=3x
+# smoke): a missing or regressed dedup re-check-in fails CI here
 python scripts/check_bench_json.py "$SMOKE_JSON" BENCH_platform.json
 
 echo "CI OK"

@@ -484,15 +484,7 @@ class DatasetManager:
         self._ensure_dataset(dataset, actor)
 
         base_id = base or self.versions.get_branch(dataset, branch)
-        adds: Dict[str, RecordEntry] = {}
-        for rec in records:
-            if isinstance(rec, RecordEntry):
-                adds[rec.record_id] = RecordEntry(rec.record_id, rec.blob,
-                                                  dict(rec.attrs))
-            else:
-                ref = self.store.put_blob(rec.data)
-                adds[rec.record_id] = RecordEntry(rec.record_id, ref,
-                                                  dict(rec.attrs))
+        adds = self._store_records(records)
         removes = list(remove_ids)
         for rid in removes:
             adds.pop(rid, None)  # removal wins over a same-call add
@@ -541,6 +533,61 @@ class DatasetManager:
         for fn in self._commit_listeners:
             fn(dataset, commit)
         return commit
+
+    # Payload batching: how many records / bytes one grouped
+    # ``ObjectStore.put_blobs`` flush may span (bounds peak memory for the
+    # encoded copies while keeping the per-call dedup probe amortized).
+    _PUT_WINDOW_RECORDS = 1024
+    _PUT_WINDOW_BYTES = 32 * 1024 * 1024
+
+    def _store_records(
+        self, records: Iterable[Union[Record, RecordEntry]]
+    ) -> Dict[str, RecordEntry]:
+        """Content-address every payload through the batched write path.
+
+        Mixed inputs are fine: :class:`RecordEntry` refs pass through
+        (their blobs are already stored — the derivation reuse contract),
+        :class:`Record` payloads flush through ``put_blobs`` in bounded
+        windows.  Insertion order matches the input order, so a duplicate
+        record id keeps its last occurrence exactly like the sequential
+        loop did.
+        """
+        adds: Dict[str, RecordEntry] = {}
+        slots: List[Union[RecordEntry, Record]] = []
+        window: List[Record] = []
+        window_bytes = 0
+
+        def flush() -> None:
+            nonlocal window_bytes
+            if not window:
+                return
+            refs = self.store.put_blobs([r.data for r in window])
+            resolved = iter(refs)
+            for i, slot in enumerate(slots):
+                if isinstance(slot, Record):
+                    slots[i] = RecordEntry(slot.record_id, next(resolved),
+                                           dict(slot.attrs))
+            for slot in slots:
+                adds[slot.record_id] = slot  # type: ignore[assignment]
+            window.clear()
+            slots.clear()
+            window_bytes = 0
+
+        for rec in records:
+            if isinstance(rec, RecordEntry):
+                slots.append(RecordEntry(rec.record_id, rec.blob,
+                                         dict(rec.attrs)))
+                continue
+            slots.append(rec)
+            window.append(rec)
+            window_bytes += len(rec.data)
+            if (len(window) >= self._PUT_WINDOW_RECORDS
+                    or window_bytes >= self._PUT_WINDOW_BYTES):
+                flush()
+        flush()
+        for slot in slots:  # tail of RecordEntry-only input
+            adds[slot.record_id] = slot  # type: ignore[assignment]
+        return adds
 
     def _index_records(self, dataset: str, commit_id: str,
                        delta: Union[VersionDiff, Manifest]) -> None:

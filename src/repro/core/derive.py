@@ -52,7 +52,7 @@ from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
 
 from .dataset import CheckoutPlan, DatasetManager, Record, version_node_id
 from .lineage import EdgeKind, NodeKind
-from .store import NotFoundError, ObjectStore
+from .store import BlobRef, NotFoundError, ObjectStore
 from .transforms import Component, Pipeline, RunContext
 from .versioning import RecordEntry, raw_entry_matches
 
@@ -911,15 +911,39 @@ class DerivationEngine:
                 else:
                     yield x
 
+    # Executed shard outputs per grouped CAS write — bounded by count AND
+    # bytes (encoding copies every missing chunk before the grouped write,
+    # so an unbounded window of large outputs would spike peak memory).
+    _PROV_PUT_WINDOW = 1024
+    _PROV_PUT_WINDOW_BYTES = 32 * 1024 * 1024
+
     def _write_prov(
         self, groups: Sequence[_Group]
     ) -> Tuple[str, int, List[RecordEntry]]:
         """Persist the provenance blob: input record → output entries, in
         input order.  Executed outputs are content-addressed into the CAS
-        here (dedups with the output commit's own blobs).  Returns
-        (digest, size, entries) — the size is recorded on the cache slot
-        so ``repro-cli cache ls`` never has to read prov blobs."""
+        here (dedups with the output commit's own blobs) through the
+        batched ``put_blobs`` writer in bounded windows — one grouped
+        dedup probe per window instead of one round trip per shard
+        output.  Returns (digest, size, entries) — the size is recorded
+        on the cache slot so ``repro-cli cache ls`` never has to read
+        prov blobs."""
         store = self.dm.store
+        executed: List[Record] = [x for g in groups for x in g.outs
+                                  if not isinstance(x, RecordEntry)]
+        refs: List[BlobRef] = []
+        window: List[bytes] = []
+        window_bytes = 0
+        for rec in executed:
+            window.append(rec.data)
+            window_bytes += len(rec.data)
+            if (len(window) >= self._PROV_PUT_WINDOW
+                    or window_bytes >= self._PROV_PUT_WINDOW_BYTES):
+                refs.extend(store.put_blobs(window))
+                window, window_bytes = [], 0
+        if window:
+            refs.extend(store.put_blobs(window))
+        resolved = iter(refs)
         body: List[list] = []
         flat_entries: List[RecordEntry] = []
         for g in groups:
@@ -928,8 +952,7 @@ class DerivationEngine:
                 if isinstance(x, RecordEntry):
                     outs.append(x)
                 else:
-                    outs.append(RecordEntry(x.record_id,
-                                            store.put_blob(x.data),
+                    outs.append(RecordEntry(x.record_id, next(resolved),
                                             dict(x.attrs)))
             body.append([g.rid, [e.to_json() for e in outs]])
             flat_entries.extend(outs)

@@ -109,12 +109,26 @@ class AttributeIndex:
     def build(cls, entries, max_cardinality: int = MAX_CARDINALITY,
               zone_block: int = ZONE_BLOCK) -> "AttributeIndex":
         """Index ``entries`` (already in record-id-sorted manifest order)."""
-        n = len(entries)
+        return cls.build_attrs([entry.attrs for entry in entries],
+                               max_cardinality=max_cardinality,
+                               zone_block=zone_block)
+
+    @classmethod
+    def build_attrs(cls, attrs_seq: Sequence[Optional[dict]],
+                    max_cardinality: int = MAX_CARDINALITY,
+                    zone_block: int = ZONE_BLOCK) -> "AttributeIndex":
+        """Index a manifest-ordered attrs sequence directly.
+
+        The write path indexes raw manifest records here without
+        materializing :class:`RecordEntry` objects — only the attrs matter
+        to the index.
+        """
+        n = len(attrs_seq)
         fields: Dict[str, dict] = {}
         postings: Dict[str, Dict[str, List[int]]] = {}
         numerics: Dict[str, List] = {}
-        for pos, entry in enumerate(entries):
-            for f, v in (entry.attrs or {}).items():
+        for pos, attrs in enumerate(attrs_seq):
+            for f, v in (attrs or {}).items():
                 if f in _RESERVED_FIELDS:
                     continue
                 info = fields.setdefault(

@@ -123,13 +123,12 @@ class RevocationEngine:
                     )
                     report.new_head_commits[f"{ds}@{branch}"] = commit.commit_id
 
-        # 2. Physical removal (respect byte-identical sharing).
-        for digest in sorted(digests):
-            if digest in shared:
-                report.blobs_retained_shared.append(digest)
-            else:
-                dm.store.delete_blob(digest)
-                report.blobs_deleted.append(digest)
+        # 2. Physical removal (respect byte-identical sharing).  All doomed
+        # payloads drop in one grouped backend delete instead of one
+        # round trip per digest.
+        report.blobs_retained_shared = sorted(digests & shared)
+        report.blobs_deleted = sorted(digests - shared)
+        dm.store.delete_blobs(report.blobs_deleted)
 
         # 3. Downstream impact via lineage.
         impacted: Set[str] = set()

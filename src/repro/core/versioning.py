@@ -389,11 +389,15 @@ class VersionStore:
     _DIR_CACHE_CAP = 16
     _INDEX_CACHE_CAP = 8
     # Pages are rewritten on touch and split once they exceed twice the
-    # target, so steady-state pages hold between page_size and 2*page_size
-    # records and a delta commit rewrites O(touched pages).
+    # target; a touched page that shrinks below half the target merges
+    # with a neighbor (the mirror rule), so steady-state pages hold
+    # between page_size/2 and 2*page_size records and a delta commit
+    # rewrites O(touched pages).
     _SPLIT_FACTOR = 2
     # Batched page fetch window for streaming scans.
     _PAGE_FETCH_WINDOW = 8
+    # How many pages flush per grouped write call.
+    _PAGE_WRITE_WINDOW = 64
 
     def __init__(self, store: ObjectStore,
                  page_size: Optional[int] = None) -> None:
@@ -428,32 +432,38 @@ class VersionStore:
     def put_manifest(self, manifest: Manifest) -> str:
         """Write a manifest from scratch; returns the tree digest.
 
-        Paged stores paginate the sorted entry stream (reusing a page blob
-        whenever its content already exists — identical runs of records
-        dedupe structurally); ``page_size=0`` writes the legacy blob.
+        Paged stores paginate the sorted entry stream and flush every page
+        through one grouped :meth:`ObjectStore.put_blobs` window (a page
+        whose content already exists — identical runs of records — dedupes
+        structurally and is never re-written); ``page_size=0`` writes the
+        legacy blob.
         """
         if not self.page_size:
             return self.store.put_json(manifest.to_json()).digest
         raw = [e.to_json() for e in manifest.iter_entries()]
-        directory = self._paginate(raw)
+        step = self.page_size
+        batches = [raw[off:off + step] for off in range(0, len(raw), step)]
+        directory = PageDirectory(self._write_pages(batches), self.page_size)
         return self._put_directory(directory)
 
-    def _paginate(self, raw_records: List[dict]) -> PageDirectory:
-        """Split record-id-sorted raw records into fixed-fanout pages."""
-        pages: List[PageInfo] = []
-        step = self.page_size
-        for off in range(0, len(raw_records), step):
-            pages.append(self._write_page(raw_records[off:off + step]))
-        return PageDirectory(pages, self.page_size)
-
-    def _write_page(self, raw_records: List[dict]) -> PageInfo:
-        ref = self.store.put_json({"records": raw_records})
-        self._cache_put(self._page_cache, ref.digest, raw_records,
-                        self._PAGE_CACHE_CAP)
-        return PageInfo(ref.digest, len(raw_records),
-                        raw_records[0]["id"], raw_records[-1]["id"],
-                        page_summary([o.get("attrs", {})
-                                      for o in raw_records]))
+    def _write_pages(self, batches: Sequence[List[dict]]) -> List[PageInfo]:
+        """Write many pages per grouped store call (bounded windows), so a
+        large check-in pays one dedup probe + one grouped write per window
+        instead of one round trip per page."""
+        out: List[PageInfo] = []
+        window = self._PAGE_WRITE_WINDOW
+        for off in range(0, len(batches), window):
+            group = batches[off:off + window]
+            refs = self.store.put_jsons([{"records": b} for b in group])
+            for raw_records, ref in zip(group, refs):
+                self._cache_put(self._page_cache, ref.digest, raw_records,
+                                self._PAGE_CACHE_CAP)
+                out.append(PageInfo(
+                    ref.digest, len(raw_records),
+                    raw_records[0]["id"], raw_records[-1]["id"],
+                    page_summary([o.get("attrs", {})
+                                  for o in raw_records])))
+        return out
 
     def _put_directory(self, directory: PageDirectory) -> str:
         digest = self.store.put_json(directory.to_json()).digest
@@ -563,20 +573,57 @@ class VersionStore:
     def _page_index_meta_key(self, page_digest: str) -> str:
         return f"attridx/page/{page_digest}"
 
-    def _ensure_page_index(self, page: PageInfo) -> str:
-        """Idempotently build/write one page's attribute index; returns its
-        blob digest.  Content-addressed by page digest, so pages carried
-        verbatim from the parent commit never rebuild."""
-        key = self._page_index_meta_key(page.digest)
-        ptr = self.store.get_meta(key)
-        if ptr is not None and self.store.has_blob(ptr["blob"]):
-            return ptr["blob"]
-        entries = [RecordEntry.from_raw(o)
-                   for o in self.get_page_records(page.digest)]
-        idx = AttributeIndex.build(entries)
-        ref = self.store.put_json(idx.to_json())
-        self.store.put_meta(key, {"blob": ref.digest, "v": idx.VERSION})
-        return ref.digest
+    def _ensure_page_indexes(self, pages: Sequence[PageInfo]) -> List[str]:
+        """Idempotently build/write the pages' attribute indexes; returns
+        their blob digests in page order.
+
+        Batched: one grouped meta probe finds the pages lacking a valid
+        pointer, their indexes are built straight from the raw page records
+        (no :class:`RecordEntry` materialization — only attrs matter),
+        flushed through one grouped :meth:`ObjectStore.put_blobs`, and the
+        pointers land in one grouped meta write.  Content-addressed by page
+        digest, so pages carried verbatim from a parent commit never
+        rebuild.
+        """
+        keys = [self._page_index_meta_key(p.digest) for p in pages]
+        ptrs = self.store.get_metas(keys)
+        out: List[Optional[str]] = []
+        build: List[int] = []
+        for i, ptr in enumerate(ptrs):
+            if ptr is not None and self.store.has_blob(ptr["blob"]):
+                out.append(ptr["blob"])
+            else:
+                out.append(None)
+                build.append(i)
+        # Build in bounded windows: grouped page prefetch (held locally —
+        # a cold rebuild larger than the page LRU must not degrade to one
+        # blob read per page), grouped index write, grouped pointer write.
+        for woff in range(0, len(build), self._PAGE_WRITE_WINDOW):
+            wbuild = build[woff:woff + self._PAGE_WRITE_WINDOW]
+            raw_by_digest: Dict[str, list] = {}
+            missing: List[str] = []
+            for i in wbuild:
+                digest = pages[i].digest
+                hit = self._cache_get(self._page_cache, digest)
+                raw_by_digest[digest] = hit
+                if hit is None:
+                    missing.append(digest)
+            if missing:
+                for d, doc in zip(missing, self.store.get_jsons(missing)):
+                    records = doc.get("records", [])
+                    raw_by_digest[d] = records
+                    self._cache_put(self._page_cache, d, records,
+                                    self._PAGE_CACHE_CAP)
+            refs = self.store.put_jsons(
+                [AttributeIndex.build_attrs(
+                    [o.get("attrs") for o in raw_by_digest[pages[i].digest]]
+                 ).to_json() for i in wbuild])
+            self.store.put_metas(
+                [(keys[i], {"blob": ref.digest, "v": AttributeIndex.VERSION})
+                 for i, ref in zip(wbuild, refs)])
+            for i, ref in zip(wbuild, refs):
+                out[i] = ref.digest
+        return out  # type: ignore[return-value]
 
     def ensure_attr_index(self, tree_digest: str,
                           manifest: Optional[Manifest] = None) -> None:
@@ -591,7 +638,7 @@ class VersionStore:
             ptr = self.store.get_meta(key)
             if ptr is not None and self._paged_index_intact(ptr):
                 return
-            page_idx = [self._ensure_page_index(p) for p in directory.pages]
+            page_idx = self._ensure_page_indexes(directory.pages)
             doc = {"v": PagedAttributeIndex.VERSION, "pages": page_idx,
                    "counts": [p.n for p in directory.pages],
                    "n": directory.n}
@@ -792,12 +839,15 @@ class VersionStore:
             if pi >= 0:
                 touched.setdefault(pi, {}).setdefault(rid, None)
 
+        # ``parts`` interleaves carried PageInfo rows with *pending* pages
+        # (raw record lists the delta rewrote).  Pendings are flushed in one
+        # grouped write at the end, after the neighbor-merge pass.
         diff = VersionDiff()
-        new_pages: List[PageInfo] = []
+        parts: List[Union[PageInfo, List[dict]]] = []
         for pi, page in enumerate(directory.pages):
             changes = touched.get(pi)
             if changes is None:
-                new_pages.append(page)  # carried verbatim — the whole point
+                parts.append(page)  # carried verbatim — the whole point
                 continue
             by_id = {o["id"]: o for o in self.get_page_records(page.digest)}
             for rid, entry in changes.items():
@@ -812,32 +862,76 @@ class VersionStore:
                 elif old["blob"]["digest"] != entry.blob.digest:
                     diff.modified.append(rid)
                 by_id[rid] = entry.to_json()
-            new_pages.extend(self._repaginate(
+            parts.extend(self._split_raw(
                 [by_id[rid] for rid in sorted(by_id)]))
         if overflow:  # empty base directory
             raw = [overflow[rid].to_json() for rid in sorted(overflow)]
-            new_pages.extend(self._repaginate(raw))
+            parts.extend(self._split_raw(raw))
             diff.added.extend(sorted(overflow))
+        parts = self._merge_undersized(parts)
+        new_pages = self._flush_parts(parts)
         diff.added.sort()
         diff.removed.sort()
         diff.modified.sort()
         diff.unchanged = directory.n - len(diff.modified) - len(diff.removed)
         return PageDirectory(new_pages, self.page_size), diff
 
-    def _repaginate(self, raw_records: List[dict]) -> List[PageInfo]:
-        """Write one touched page back, splitting if it outgrew the fanout
-        (and vanishing if it emptied)."""
+    def _split_raw(self, raw_records: List[dict]) -> List[List[dict]]:
+        """One touched page's records back into page-sized pendings:
+        splitting if it outgrew the fanout, vanishing if it emptied."""
         if not raw_records:
             return []
         if len(raw_records) <= self._SPLIT_FACTOR * self.page_size:
-            return [self._write_page(raw_records)]
+            return [raw_records]
         n_parts = -(-len(raw_records) // self.page_size)
-        out: List[PageInfo] = []
-        for i in range(n_parts):
-            lo = i * len(raw_records) // n_parts
-            hi = (i + 1) * len(raw_records) // n_parts
-            out.append(self._write_page(raw_records[lo:hi]))
+        return [raw_records[i * len(raw_records) // n_parts:
+                            (i + 1) * len(raw_records) // n_parts]
+                for i in range(n_parts)]
+
+    def _merge_undersized(
+        self, parts: List[Union[PageInfo, List[dict]]]
+    ) -> List[Union[PageInfo, List[dict]]]:
+        """Neighbor-merge rule — the mirror of the >2x split rule.
+
+        A delta that shrinks pages below half the fanout merges them into
+        an adjacent page (loading a carried neighbor's records if needed)
+        as long as the combined page stays within the split threshold, so
+        shrink-heavy workloads stop bloating the page directory.  Only
+        pairs involving at least one page this delta rewrote are
+        considered: untouched history is never rewritten spontaneously.
+        Pages are contiguous runs of the sorted id space, so any adjacent
+        merge preserves directory order.
+        """
+        half = self.page_size // 2
+        cap = self._SPLIT_FACTOR * self.page_size
+        out: List[Union[PageInfo, List[dict]]] = []
+        for part in parts:
+            if out:
+                prev = out[-1]
+                prev_n = len(prev) if isinstance(prev, list) else prev.n
+                cur_n = len(part) if isinstance(part, list) else part.n
+                if ((isinstance(prev, list) or isinstance(part, list))
+                        and (prev_n < half or cur_n < half)
+                        and prev_n + cur_n <= cap):
+                    out[-1] = self._part_records(prev) \
+                        + self._part_records(part)
+                    continue
+            out.append(part)
         return out
+
+    def _part_records(self, part: Union[PageInfo, List[dict]]) -> List[dict]:
+        if isinstance(part, list):
+            return part
+        return list(self.get_page_records(part.digest))
+
+    def _flush_parts(
+        self, parts: List[Union[PageInfo, List[dict]]]
+    ) -> List[PageInfo]:
+        """Write every pending page through one grouped batch, splicing the
+        results back between the carried rows in order."""
+        written = iter(self._write_pages(
+            [p for p in parts if isinstance(p, list)]))
+        return [next(written) if isinstance(p, list) else p for p in parts]
 
     def get_commit(self, commit_id: str) -> Commit:
         return Commit.from_json(commit_id, self.store.get_json(commit_id))

@@ -181,7 +181,10 @@ class Platform:
     # ------------------------------------------------------------------ stats
 
     def store_stats(self) -> dict:
-        """Storage-engine counters incl. the verified-once read cache."""
+        """Storage-engine counters: the verified-once read cache plus the
+        batched write path (``put_calls`` / ``chunks_written`` /
+        ``chunks_deduped`` / ``exists_probes`` — a fully-deduplicated
+        re-check-in shows up as one probe and zero chunk writes)."""
         from dataclasses import asdict
 
         out = asdict(self.store.stats)

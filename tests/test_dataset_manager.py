@@ -153,3 +153,54 @@ def test_gc_collects_orphans(dm):
         dm.store.get_blob(orphan)
     # dataset still intact
     assert dm.checkout("raw", actor="a").read("r0") == b"payload-r0"
+
+
+# -- batched ingest: write counters + mixed Record/RecordEntry inputs --------
+
+
+def test_checkin_write_counters_and_dedup(dm):
+    stats = dm.store.stats
+    dm.check_in("w", recs(8), actor="a")
+    first_written = stats.chunks_written
+    assert first_written >= 8                  # payloads + pages + commit
+    assert stats.put_calls >= 1
+    probes = stats.exists_probes
+    # identical payloads into a fresh dataset: every payload chunk, page,
+    # and page index dedups — only the commit body is new bytes
+    dm.check_in("w2", recs(8), actor="a")
+    assert stats.chunks_written - first_written <= 2
+    assert stats.chunks_deduped >= 8
+    # grouped probes: a handful of round trips, not one per chunk
+    assert stats.exists_probes - probes <= 8
+
+
+def test_checkin_mixed_records_and_entries_last_wins(dm):
+    c1 = dm.check_in("mix", recs(3), actor="a")
+    base_entries = {e.record_id: e
+                    for e in dm.versions.get_manifest(c1.tree).entries()}
+    reused = base_entries["r1"]                # RecordEntry ref, no payload
+    # Record then RecordEntry for the same id: the entry (later) wins
+    dm.check_in("mix2", [Record("r1", b"fresh", {"v": 1}), reused],
+                actor="a")
+    snap = dm.checkout("mix2", actor="a")
+    assert snap.read("r1") == b"payload-r1"
+    # RecordEntry then Record: the record (later) wins
+    dm.check_in("mix3", [reused, Record("r1", b"fresh", {"v": 1})],
+                actor="a")
+    assert dm.checkout("mix3", actor="a").read("r1") == b"fresh"
+
+
+def test_checkin_window_flush_preserves_order():
+    dm2 = DatasetManager(ObjectStore(MemoryBackend(), chunk_size=4096))
+    old = DatasetManager._PUT_WINDOW_RECORDS
+    DatasetManager._PUT_WINDOW_RECORDS = 4     # force mid-stream flushes
+    try:
+        records = [Record(f"r{i}", b"v%d" % i, {}) for i in range(10)]
+        records.append(Record("r3", b"override", {}))   # dup across windows
+        dm2.check_in("w", records, actor="a")
+        snap = dm2.checkout("w", actor="a")
+        assert len(snap) == 10
+        assert snap.read("r3") == b"override"
+        assert snap.read("r7") == b"v7"
+    finally:
+        DatasetManager._PUT_WINDOW_RECORDS = old

@@ -444,3 +444,122 @@ def test_commit_delta_add_remove_overlap_parity(page_size):
     assert diff.added == ["k9"]
     assert diff.modified == []
     assert diff.unchanged == 5
+
+
+# -- neighbor merge: the mirror of the split rule ----------------------------
+
+
+def _dir_for(plat, name="m"):
+    tree = plat.versions.get_commit(plat.versions.resolve(name, "main")).tree
+    return plat.versions.get_page_directory(tree)
+
+
+def test_delete_heavy_history_merges_pages_and_stays_byte_identical():
+    """Scattered deletions shrink pages below half fanout; the merge rule
+    must heal the directory while every observable surface (checkout,
+    diff across the whole history) stays byte-identical to the
+    monolithic baseline."""
+    paged = Platform.open(actor="t", page_size=PAGE)
+    mono = Platform.open(actor="t", page_size=0)
+    recs = _fixture_records(200)
+    paged.dataset("m").check_in(recs)
+    mono.dataset("m").check_in(recs)
+    all_ids = [r.record_id for r in recs]
+    for k in range(4):                      # 4 rounds x 40 scattered deletes
+        doomed = [rid for i, rid in enumerate(all_ids) if i % 5 == k]
+        paged.dataset("m").delete_records(doomed)
+        mono.dataset("m").delete_records(doomed)
+        assert _pairs(paged.dataset("m").plan()) \
+            == _pairs(mono.dataset("m").plan())
+        assert _pairs(paged.dataset("m").plan(use_index=False)) \
+            == _pairs(mono.dataset("m").plan(use_index=False))
+    cp = paged.versions.list_commits("m")
+    cm = mono.versions.list_commits("m")
+    for (pa, pb), (ma, mb) in zip(zip(cp, cp[1:]), zip(cm, cm[1:])):
+        dp = paged.versions.diff(pa, pb)
+        dm = mono.versions.diff(ma, mb)
+        assert (dp.added, dp.removed, dp.modified, dp.unchanged) \
+            == (dm.added, dm.removed, dm.modified, dm.unchanged)
+    directory = _dir_for(paged)
+    assert directory.n == 40
+    # merged: 40 records may not sprawl across the original 13 pages
+    assert len(directory.pages) <= -(-directory.n // (PAGE // 2))
+    # and the split threshold still caps every page
+    assert all(p.n <= 2 * PAGE for p in directory.pages)
+    # directory invariants survive merging: sorted, contiguous, consistent
+    ids = [o["id"] for raw in paged.versions.iter_page_records(directory)
+           for o in raw]
+    assert ids == sorted(ids)
+    for page in directory.pages:
+        assert page.lo <= page.hi
+
+
+def test_merge_rewrites_only_touched_neighborhood():
+    """A deletion that undersizes one page merges it into ONE neighbor;
+    every other page digest is still carried verbatim (structural
+    sharing survives the merge rule)."""
+    plat = Platform.open(actor="t", page_size=PAGE)
+    plat.dataset("m").check_in(_fixture_records(160))   # 10 full pages
+    before = _dir_for(plat)
+    first_page_ids = [o["id"] for o in
+                      plat.versions.get_page_records(before.pages[0].digest)]
+    plat.dataset("m").delete_records(first_page_ids[:PAGE - 4])
+    after = _dir_for(plat)
+    assert after.n == 160 - (PAGE - 4)
+    # page0 (now 4 records) merged into its right neighbor
+    assert len(after.pages) == len(before.pages) - 1
+    assert after.pages[0].n == 4 + PAGE
+    assert [p.digest for p in after.pages[1:]] \
+        == [p.digest for p in before.pages[2:]]
+
+
+def test_merge_respects_split_cap():
+    """An undersized page next to a near-capacity neighbor must NOT merge
+    past the 2x fanout split threshold."""
+    vs = VersionStore(ObjectStore(MemoryBackend()), page_size=4)
+    base_m = Manifest([_entry(vs, f"k{i:03d}", b"v%d" % i)
+                       for i in range(12)])            # pages of 4
+    base = vs.commit("ds", base_m, [], "u", "base")
+    # grow the middle page to 2x fanout (8 records): ids inside its range
+    c2, _, _ = vs.commit_delta(
+        "ds", base.commit_id,
+        adds={f"k004x{i}": _entry(vs, f"k004x{i}", b"g%d" % i)
+              for i in range(4)},
+        removes=[], author="u", message="grow")
+    grown = vs.get_page_directory(vs.get_commit(c2.commit_id).tree)
+    assert [p.n for p in grown.pages] == [4, 8, 4]
+    # shrink the first page below half (1 record); 1 + 8 > 8 == cap, so it
+    # must NOT merge into the full neighbor — never exceed the threshold
+    c3, _, _ = vs.commit_delta(
+        "ds", c2.commit_id, adds={},
+        removes=["k000", "k001", "k002"], author="u", message="shrink")
+    final = vs.get_page_directory(vs.get_commit(c3.commit_id).tree)
+    assert sum(p.n for p in final.pages) == 13
+    assert all(p.n <= 8 for p in final.pages)
+    assert [p.n for p in final.pages] == [1, 8, 4]
+    assert vs.get_manifest(vs.get_commit(c3.commit_id).tree).record_ids() \
+        == sorted([f"k{i:03d}" for i in range(3, 12)]
+                  + [f"k004x{i}" for i in range(4)])
+
+
+def test_index_rebuild_wider_than_page_cache_window():
+    """A cold per-page index rebuild spanning more pages than the page LRU
+    (and the grouped write window) must still produce a working index."""
+    vs = VersionStore(ObjectStore(MemoryBackend()), page_size=4)
+    n = 600                                               # 150 pages
+    man = Manifest([RecordEntry(f"r{i:04d}",
+                                vs.store.put_blob(b"p%d" % i),
+                                {"lang": ["en", "fr"][i % 2]})
+                    for i in range(n)])
+    commit = vs.commit("ds", man, [], "u", "base")
+    # wipe every index pointer + parsed cache: the next ensure is cold
+    for key in list(vs.store.list_meta("attridx/")):
+        vs.store.delete_meta(key)
+    vs._index_cache.clear()
+    vs._page_cache.clear()
+    vs.ensure_attr_index(commit.tree)
+    idx = vs.get_attr_index(commit.tree)
+    assert idx is not None
+    postings = idx.postings_for("lang")
+    assert postings is not None
+    assert len(postings["s:en"]) == n // 2

@@ -1,4 +1,5 @@
-"""Storage engine tests: content addressing, chunking, dedup, GC, integrity."""
+"""Storage engine tests: content addressing, chunking, dedup, GC, integrity,
+and the batched write path (``put_blobs`` ≡ sequential ``put_blob`` loop)."""
 
 import os
 
@@ -6,7 +7,34 @@ import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.store import (DEFAULT_CHUNK_SIZE, FileBackend, IntegrityError,
-                              MemoryBackend, NotFoundError, ObjectStore)
+                              MemoryBackend, NotFoundError, ObjectStore,
+                              StorageBackend)
+
+
+class MinimalBackend(StorageBackend):
+    """Only the five abstract methods — exercises every grouped-capability
+    loop fallback (``exists_many`` / ``put_many`` / ``delete_many``)."""
+
+    def __init__(self):
+        self.data = {}
+
+    def put(self, key, data):
+        self.data[key] = bytes(data)
+
+    def get(self, key):
+        try:
+            return self.data[key]
+        except KeyError:
+            raise NotFoundError(key) from None
+
+    def exists(self, key):
+        return key in self.data
+
+    def delete(self, key):
+        self.data.pop(key, None)
+
+    def list_keys(self, prefix=""):
+        return iter(sorted(k for k in self.data if k.startswith(prefix)))
 
 
 @pytest.fixture(params=["memory", "file"])
@@ -183,6 +211,129 @@ def test_get_blobs_dedups_shared_chunks():
     assert store.stats.gets - g0 == ref.n_chunks
 
 
+# -- batched writes: put_blobs ≡ sequential put_blob loop ---------------------
+
+
+def _payload_matrix():
+    """Single-chunk, exact/off-by-one chunk boundaries, multi-chunk, empty,
+    compressible, and intra-call duplicates (chunk_size=1024 fixtures)."""
+    rng = os.urandom
+    shared = rng(1024)
+    base = [
+        b"",
+        b"short",
+        rng(1023), rng(1024), rng(1025),           # boundary straddles
+        rng(3 * 1024 + 7),                         # multi-chunk, unaligned
+        rng(4 * 1024),                             # multi-chunk, aligned
+        b"compress me " * 500,                     # zlib-friendly
+        shared + rng(512),                         # payloads sharing a chunk
+        shared + rng(700),
+    ]
+    return base + [base[3], base[7], base[5]]      # intra-call duplicates
+
+
+def _backend_state(backend):
+    return {k: backend.get(k) for k in backend.list_keys()}
+
+
+def _make_backend(kind, tmp_path, tag):
+    if kind == "memory":
+        return MemoryBackend()
+    if kind == "minimal":
+        return MinimalBackend()
+    return FileBackend(str(tmp_path / f"cas-{tag}"))
+
+
+@pytest.mark.parametrize("kind", ["memory", "file", "minimal"])
+@pytest.mark.parametrize("compress", [True, False])
+def test_put_blobs_equivalent_to_loop(kind, compress, tmp_path):
+    payloads = _payload_matrix()
+    loop_store = ObjectStore(_make_backend(kind, tmp_path, "loop"),
+                             chunk_size=1024, compress=compress)
+    batch_store = ObjectStore(_make_backend(kind, tmp_path, "batch"),
+                              chunk_size=1024, compress=compress)
+    loop_refs = [loop_store.put_blob(p) for p in payloads]
+    batch_refs = batch_store.put_blobs(payloads)
+    # identical refs AND identical stored bytes, key for key
+    assert batch_refs == loop_refs
+    assert _backend_state(batch_store.backend) \
+        == _backend_state(loop_store.backend)
+    # both read back through either API
+    assert batch_store.get_blobs(batch_refs) == payloads
+    for ref, payload in zip(batch_refs, payloads):
+        assert batch_store.get_blob(ref) == payload
+
+
+def test_put_blobs_empty_and_single():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024)
+    assert store.put_blobs([]) == []
+    data = os.urandom(2048)
+    assert store.put_blobs([data]) == [store.put_blob(data)]
+
+
+def test_put_blobs_fully_deduplicated_batch_writes_nothing():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024)
+    payloads = [os.urandom(3000), os.urandom(500), b"dup", b"dup"]
+    store.put_blobs(payloads)
+    written = store.stats.chunks_written
+    probes = store.stats.exists_probes
+    refs = store.put_blobs(payloads)            # everything already stored
+    assert store.stats.chunks_written == written
+    assert store.stats.exists_probes == probes + 1   # ONE grouped probe
+    assert store.get_blobs(refs) == payloads
+
+
+def test_put_blobs_write_counters():
+    store = ObjectStore(MemoryBackend(), chunk_size=1024)
+    payloads = [os.urandom(1500), os.urandom(600), b"x", b"x"]
+    refs = store.put_blobs(payloads)
+    # 1500B -> 2 chunks (+1 blob manifest, not a chunk), 600B -> 1,
+    # "x" -> 1 distinct + 1 intra-call duplicate
+    assert store.stats.put_calls == 1
+    assert store.stats.chunks_written == 4
+    assert store.stats.chunks_deduped == 1
+    assert store.stats.exists_probes == 1
+    assert refs[2] == refs[3]
+    # the sequential path keeps the same counters per chunk
+    seq = ObjectStore(MemoryBackend(), chunk_size=1024)
+    for p in payloads:
+        seq.put_blob(p)
+    assert seq.stats.put_calls == 4
+    assert seq.stats.chunks_written == 4
+    assert seq.stats.chunks_deduped == 1
+    assert seq.stats.exists_probes == 6          # per chunk + blob manifest
+
+
+def test_put_blobs_minimal_backend_fallback_dedups():
+    backend = MinimalBackend()
+    store = ObjectStore(backend, chunk_size=1024)
+    data = os.urandom(2500)
+    r1 = store.put_blobs([data, data])
+    assert r1[0] == r1[1]
+    state = dict(backend.data)
+    store.put_blobs([data])
+    assert backend.data == state                 # nothing rewritten
+
+
+# -- grouped deletes ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["memory", "file", "minimal"])
+def test_delete_blobs_grouped(kind, tmp_path):
+    store = ObjectStore(_make_backend(kind, tmp_path, "del"),
+                        chunk_size=1024)
+    keep = store.put_blob(os.urandom(3000))
+    small = store.put_blob(os.urandom(400))
+    big = store.put_blob(os.urandom(5000))       # multi-chunk w/ manifest
+    store.get_blob(big)                          # warm the chunk cache
+    store.delete_blobs([small, big.digest])
+    assert store.get_blob(keep)
+    for doomed in (small, big):
+        with pytest.raises(NotFoundError):
+            store.get_blob(doomed)               # not served from cache
+    store.delete_blobs([])                       # no-op
+
+
 # -- pruned FileBackend listing ----------------------------------------------
 
 
@@ -240,3 +391,31 @@ def test_property_dedup_identical_digests(blobs):
     # all blobs still readable
     for b, r in zip(blobs, refs):
         assert store.get_blob(r) == b
+
+
+def test_sniff_catches_tiled_high_entropy_data():
+    """A chunk of *repeated* random blocks has a wide byte alphabet but
+    compresses massively; the deep prefix probe must keep zlib in play
+    (the strided sample alone would wave it off as incompressible)."""
+    tiled = os.urandom(1024) * 64                         # 64 KiB, period 1 KiB
+    assert ObjectStore._looks_compressible(tiled)
+    store = ObjectStore(MemoryBackend(), chunk_size=DEFAULT_CHUNK_SIZE)
+    store.put_blob(tiled)
+    assert store.stats.bytes_stored < len(tiled) // 4     # stored compressed
+    # genuinely random data of the same size still skips the attempt
+    assert not ObjectStore._looks_compressible(os.urandom(64 * 1024))
+
+
+def test_sniff_escape_hatch_restores_unconditional_compression():
+    """compress_sniff=False must always attempt zlib — the storage-size
+    escape hatch for wide-alphabet-but-compressible mid-size chunks."""
+    # period coprime to the sample stride, so the strided sniff sees only
+    # fresh random bytes and (wrongly) waves the chunk off as raw
+    tiled = os.urandom(509) * 5                           # ~2.5 KiB
+    assert not ObjectStore._looks_compressible(tiled)
+    sniffed = ObjectStore(MemoryBackend())
+    sniffed.put_blob(tiled)
+    assert sniffed.stats.bytes_stored > len(tiled)        # stored raw
+    eager = ObjectStore(MemoryBackend(), compress_sniff=False)
+    eager.put_blob(tiled)
+    assert eager.stats.bytes_stored < len(tiled) // 2     # compressed
