@@ -1,0 +1,85 @@
+"""Remote object-storage walkthrough: URL backends, grouped + hedged I/O,
+and the on-disk chunk tier that warms a cold process from local disk.
+
+Run:  PYTHONPATH=src python examples/remote_store_walkthrough.py
+
+What it shows:
+1. ``Platform.open`` over a backend URL — here a simulated object store
+   with 20 ms per-request RTT, jitter, and deterministic latency tails.
+2. The grouped scheduler collapsing a whole check-in / checkout into a
+   handful of round trips (vs one per request), with request hedging
+   beating the injected stragglers — all visible in ``store stats``.
+3. The second, on-disk cache tier: a brand-new Platform (a "cold
+   process") over the same remote store reads its data from local disk
+   with zero additional remote chunk fetches.
+"""
+
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.dataset import Record  # noqa: E402
+from repro.core.store import MemoryBackend, ObjectStore  # noqa: E402
+from repro.platform import Platform  # noqa: E402
+from repro.store.remote import SimulatedRemoteBackend  # noqa: E402
+
+
+def remote_counters(plat):
+    stats = plat.store_stats()
+    return {k: stats[k] for k in ("remote_requests", "retries",
+                                  "hedges_issued", "hedge_wins",
+                                  "disk_tier_hits")}
+
+
+def main() -> int:
+    tier_dir = tempfile.mkdtemp(prefix="repro-walkthrough-tier-")
+
+    # -- 1. a latency-laden object store, one URL away ----------------------
+    # (The URL form works too: Platform.open("memory://?rtt=0.02&...").
+    # Building the backend directly lets two Platforms share it below,
+    # standing in for two processes against one remote object store.)
+    backend = SimulatedRemoteBackend(MemoryBackend(), rtt=0.02,
+                                     jitter=0.002, tail_every=10, tail=0.3)
+    plat = Platform.open(ObjectStore(backend, disk_cache_bytes=64 << 20,
+                                     disk_cache_dir=tier_dir),
+                         actor="walkthrough")
+    print(f"opened {plat!r}")
+    print(f"  (simulated: 20ms RTT, 2ms jitter, +300ms every 10th request)")
+
+    # -- 2. grouped + hedged check-in / checkout ----------------------------
+    records = [Record(f"r{i:03d}", os.urandom(700), {"i": i})
+               for i in range(48)]
+    t0 = time.perf_counter()
+    plat.dataset("speech").check_in(records, message="ingest")
+    print(f"check_in of {len(records)} records: "
+          f"{time.perf_counter() - t0:.2f}s "
+          f"(naive would pay ~{len(records) * 2 * 0.02:.1f}s in RTT alone)")
+
+    t0 = time.perf_counter()
+    snap = plat.dataset("speech").checkout()
+    snap.read_batch(snap.record_ids())
+    print(f"checkout + read_batch: {time.perf_counter() - t0:.2f}s")
+    print(f"counters after warm: {remote_counters(plat)}")
+    #   hedge_wins > 0: duplicates of the +300ms stragglers answered first.
+
+    # -- 3. cold process warms from the disk tier ---------------------------
+    requests_before = backend.remote_counters["remote_requests"]
+    cold = Platform.open(ObjectStore(backend, disk_cache_bytes=64 << 20,
+                                     disk_cache_dir=tier_dir),
+                         actor="walkthrough")
+    snap = cold.dataset("speech").checkout()
+    snap.read_batch(snap.record_ids())
+    stats = cold.store_stats()
+    print(f"cold process: disk_tier_hits={stats['disk_tier_hits']}, "
+          f"remote requests for payload chunks="
+          f"{backend.remote_counters['remote_requests'] - requests_before} "
+          f"(manifest/meta reads only — chunks came from local disk)")
+    print(f"disk tier: {stats['disk_cache']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

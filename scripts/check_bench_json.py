@@ -27,6 +27,9 @@ REQUIRED_ROWS = {
         "derive_incremental",
         "commit_append_small_delta",
         "diff_large",
+        "remote_checkin_50ms_rtt",
+        "remote_checkout_50ms_rtt",
+        "remote_hedged_tail_read",
     ),
     "loader": (
         "loader_steady_state_legacy",
@@ -37,7 +40,9 @@ REQUIRED_METRICS = {
     "platform": ("checkout_filtered_speedup", "cas_cache_hits",
                  "derive_cached_speedup", "derive_incremental_speedup",
                  "commit_delta_speedup", "diff_large_speedup",
-                 "checkin_dedup_speedup"),
+                 "checkin_dedup_speedup", "remote_checkin_speedup",
+                 "remote_checkout_speedup", "remote_vs_local_ratio",
+                 "remote_hedge_wins"),
     "loader": ("loader_steady_state_speedup",),
 }
 # Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
@@ -52,6 +57,23 @@ RATIO_FLOORS = {
         "commit_delta_speedup": (10.0, 3.0),
         "diff_large_speedup": (10.0, 3.0),
         "checkin_dedup_speedup": (10.0, 3.0),
+        # Grouped windows vs the naive per-request loop at 50 ms simulated
+        # RTT — the remote subsystem's acceptance bar.
+        "remote_checkin_speedup": (10.0, 3.0),
+        "remote_checkout_speedup": (10.0, 3.0),
+        # hedge_wins is a count, not a ratio: >= 1 proves hedging
+        # demonstrably beat an injected straggler.
+        "remote_hedge_wins": (1, 1),
+    },
+}
+# Ceiling contracts: metric -> (non-smoke ceiling, smoke ceiling) — for
+# metrics where SMALLER is better.  The grouped remote data path at 50 ms
+# RTT must stay within a small constant factor of the identical stack with
+# the wire cost at zero (i.e. the latency bill amortizes across the
+# window instead of multiplying per request).
+RATIO_CEILINGS = {
+    "platform": {
+        "remote_vs_local_ratio": (120.0, 250.0),
     },
 }
 
@@ -91,6 +113,15 @@ def check(path: str) -> None:
                     f"section {section!r} metric {metric}={value!r} below "
                     f"the {'smoke ' if smoke else ''}contract floor "
                     f"{floor}x")
+        for metric, (full_ceiling, smoke_ceiling) in \
+                RATIO_CEILINGS.get(section, {}).items():
+            ceiling = smoke_ceiling if smoke else full_ceiling
+            value = metrics[metric]
+            if not isinstance(value, (int, float)) or value > ceiling:
+                raise ValueError(
+                    f"section {section!r} metric {metric}={value!r} above "
+                    f"the {'smoke ' if smoke else ''}contract ceiling "
+                    f"{ceiling}x")
 
 
 def main(argv) -> int:

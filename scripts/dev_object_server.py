@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Run the hermetic object server on localhost.
+
+Usage:
+    python scripts/dev_object_server.py [--port 8123] [--root DIR] [-v]
+
+Serves the minimal GET/PUT/HEAD/DELETE object protocol that
+``repro.store.remote.HttpBackend`` speaks.  With ``--root`` the objects
+live in a directory (restart-safe); without it they live in memory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.store import FileBackend, MemoryBackend  # noqa: E402
+from repro.store.remote import DevObjectServer  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8123)
+    ap.add_argument("--root", default=None,
+                    help="serve objects from this directory (default: memory)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="log each request")
+    args = ap.parse_args(argv)
+
+    backend = FileBackend(args.root) if args.root else MemoryBackend()
+    server = DevObjectServer(backend, host=args.host, port=args.port,
+                             quiet=not args.verbose).start()
+    print(f"serving objects at {server.url} "
+          f"({'dir ' + args.root if args.root else 'in-memory'}); Ctrl-C stops")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

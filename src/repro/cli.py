@@ -28,6 +28,13 @@ Examples:
     repro-cli --repo /tmp/repo cache ls
     repro-cli --repo /tmp/repo cache stats
     repro-cli --repo /tmp/repo cache prune --keep-latest 2
+    repro-cli --repo /tmp/repo store stats
+    repro-cli --repo 'http://localhost:8123' datasets
+
+``--repo`` also accepts backend URLs (``memory://``, ``file:///path``,
+``http://host:port`` — see :mod:`repro.store.remote.urls`), so the same
+commands run against a remote object server; ``store stats`` then shows
+the remote request / retry / hedge counters next to the cache tiers.
 """
 
 from __future__ import annotations
@@ -257,10 +264,20 @@ def cmd_cache(plat: Platform, args) -> int:
     raise AssertionError(args.cache_cmd)  # pragma: no cover
 
 
+def cmd_store(plat: Platform, args) -> int:
+    """Storage-engine introspection (``store stats``)."""
+    if args.store_cmd == "stats":
+        print(json.dumps(plat.store_stats(), indent=2, sort_keys=True))
+        return 0
+    raise AssertionError(args.store_cmd)  # pragma: no cover
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="repro-cli",
                                  description=__doc__.splitlines()[0])
-    ap.add_argument("--repo", required=True, help="repository directory")
+    ap.add_argument("--repo", required=True,
+                    help="repository directory, or a backend URL "
+                         "(memory://, file:///path, http://host:port)")
     ap.add_argument("--actor", default=os.environ.get("REPRO_ACTOR", "cli"))
     sub = ap.add_subparsers(dest="cmd", required=True)
 
@@ -363,6 +380,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     cp.add_argument("--keep-latest", type=_at_least_one, default=1,
                     metavar="N", help="slots to keep per group (default 1)")
     p.set_defaults(fn=cmd_cache)
+
+    p = sub.add_parser("store",
+                       help="storage-engine introspection")
+    store_sub = p.add_subparsers(dest="store_cmd", required=True)
+    store_sub.add_parser(
+        "stats",
+        help="read/write/cache/remote counters + both cache tiers (JSON)")
+    p.set_defaults(fn=cmd_store)
 
     args = ap.parse_args(argv)
     plat = _open(args)

@@ -97,10 +97,18 @@ class Platform:
         """Open (or create) a platform over ``target``.
 
         - ``None``            → ephemeral in-memory store
+        - URL string          → resolved by :func:`repro.store.remote.
+          backend_from_url`: ``memory://`` / ``file:///path`` /
+          ``http://host:port`` (plus simulation query params, e.g.
+          ``memory://?rtt=0.05``)
         - path / str          → :class:`FileBackend` repository directory
         - ``StorageBackend``  → wrapped in an :class:`ObjectStore`
         - ``ObjectStore``     → used as-is
         - ``DatasetManager``  → wrapped directly (compat path)
+
+        ``**store_kwargs`` reach the :class:`ObjectStore` — notably
+        ``disk_cache_bytes=`` / ``disk_cache_dir=`` to put a local disk
+        tier under the chunk cache of a remote backend.
 
         ``page_size`` sets the manifest page fanout (``0`` = legacy
         monolithic manifests — the measurable baseline; reads always
@@ -120,6 +128,11 @@ class Platform:
             if target is None:
                 backend: StorageBackend = MemoryBackend()
                 store = ObjectStore(backend, **store_kwargs)
+            elif isinstance(target, str) and "://" in target:
+                # Lazy import: the remote subsystem (http.client etc.)
+                # should not load for purely local platforms.
+                from .store.remote import backend_from_url
+                store = ObjectStore(backend_from_url(target), **store_kwargs)
             elif isinstance(target, (str, os.PathLike)):
                 store = ObjectStore(FileBackend(os.fspath(target)),
                                     **store_kwargs)
@@ -184,11 +197,14 @@ class Platform:
         """Storage-engine counters: the verified-once read cache plus the
         batched write path (``put_calls`` / ``chunks_written`` /
         ``chunks_deduped`` / ``exists_probes`` — a fully-deduplicated
-        re-check-in shows up as one probe and zero chunk writes)."""
+        re-check-in shows up as one probe and zero chunk writes) plus the
+        remote I/O counters (``remote_requests`` / ``retries`` /
+        ``hedges_issued`` / ``hedge_wins``) and both cache tiers."""
         from dataclasses import asdict
 
         out = asdict(self.store.stats)
         out["cache"] = self.store.cache_info()
+        out["disk_cache"] = self.store.disk_cache_info()
         return out
 
     # ------------------------------------------------------------------ workflows

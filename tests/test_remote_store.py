@@ -1,0 +1,349 @@
+"""Remote subsystem tests: scheduler windows/retry/hedging, the simulated
+backend's network physics, the HTTP backend against the hermetic dev
+server, URL resolution, and the Platform/CLI surface over all of it."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.store import MemoryBackend, NotFoundError, ObjectStore
+from repro.store.remote import (DevObjectServer, GroupedScheduler,
+                                HttpBackend, SimulatedRemoteBackend,
+                                TransientError, backend_from_url,
+                                is_backend_url)
+
+# ---------------------------------------------------------------------------
+# GroupedScheduler
+# ---------------------------------------------------------------------------
+
+
+def _sched(**kw):
+    kw.setdefault("backoff_base", 0.001)
+    kw.setdefault("poll_interval", 0.002)
+    return GroupedScheduler(**kw)
+
+
+def test_map_preserves_order_and_results():
+    s = _sched(hedge=False)
+    assert s.map(lambda x: x * 2, range(50)) == [x * 2 for x in range(50)]
+    assert s.map(lambda x: x, []) == []
+    assert s.map(lambda x: -x, [7]) == [-7]
+
+
+def test_map_bounds_concurrency():
+    lock = threading.Lock()
+    state = {"now": 0, "peak": 0}
+
+    def fn(x):
+        with lock:
+            state["now"] += 1
+            state["peak"] = max(state["peak"], state["now"])
+        time.sleep(0.01)
+        with lock:
+            state["now"] -= 1
+        return x
+
+    s = _sched(max_in_flight=4, hedge=False)
+    assert s.map(fn, range(32)) == list(range(32))
+    assert state["peak"] <= 4
+
+
+def test_map_retries_transient_then_succeeds():
+    bumps = {}
+    attempts = {}
+    lock = threading.Lock()
+
+    def fn(x):
+        with lock:
+            attempts[x] = attempts.get(x, 0) + 1
+            if x % 3 == 0 and attempts[x] < 3:
+                raise TransientError("flaky")
+        return x
+
+    s = _sched(hedge=False,
+               bump=lambda n, k=1: bumps.__setitem__(n, bumps.get(n, 0) + k))
+    assert s.map(fn, range(10)) == list(range(10))
+    assert bumps["retries"] == 2 * 4             # items 0,3,6,9 x 2 retries
+
+
+def test_map_nonretryable_aborts():
+    def fn(x):
+        if x == 5:
+            raise ValueError("fatal")
+        return x
+
+    with pytest.raises(ValueError, match="fatal"):
+        _sched(hedge=False).map(fn, range(10))
+
+
+def test_map_exhausted_retries_raise_last_error():
+    def fn(x):
+        raise TransientError(f"always-{x}")
+
+    with pytest.raises(TransientError):
+        _sched(retries=2, hedge=False).map(fn, range(4))
+
+
+def test_call_retries_inline():
+    attempts = {"n": 0}
+
+    def fn(_):
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise ConnectionError("reset")
+        return "ok"
+
+    assert _sched().call(fn, None) == "ok"
+    assert attempts["n"] == 3
+
+
+def test_hedging_beats_a_straggler():
+    """One item's first attempt hangs; the hedge duplicate answers fast, so
+    the batch finishes long before the straggler would have."""
+    bumps = {}
+    lock = threading.Lock()
+    invocations = {}
+
+    def fn(x):
+        with lock:
+            invocations[x] = invocations.get(x, 0) + 1
+            first = invocations[x] == 1
+        if x == 17 and first:
+            time.sleep(5.0)                      # pathological straggler
+        else:
+            time.sleep(0.01)
+        return x
+
+    s = _sched(max_in_flight=32, hedge_min_samples=4,
+               bump=lambda n, k=1: bumps.__setitem__(n, bumps.get(n, 0) + k))
+    t0 = time.monotonic()
+    assert s.map(fn, range(24)) == list(range(24))
+    elapsed = time.monotonic() - t0
+    assert elapsed < 2.0                         # did not wait 5 s
+    assert bumps.get("hedges_issued", 0) >= 1
+    assert bumps.get("hedge_wins", 0) >= 1
+
+
+def test_map_drain_waits_for_side_effect_losers():
+    """drain=True must not return while a losing (slow) copy of a
+    side-effecting request is still in flight."""
+    lock = threading.Lock()
+    state = {"started": 0, "finished": 0}
+
+    def fn(x):
+        with lock:
+            state["started"] += 1
+            slow = x == 9 and state["started"] <= 10  # first copy of item 9
+        time.sleep(0.3 if slow else 0.01)
+        with lock:
+            state["finished"] += 1
+        return x
+
+    s = _sched(max_in_flight=16, hedge_min_samples=4)
+    s.map(fn, range(10), drain=True)
+    with lock:
+        assert state["finished"] == state["started"]
+
+
+# ---------------------------------------------------------------------------
+# SimulatedRemoteBackend
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_pipelining_beats_naive_loop():
+    """The acceptance shape at small scale: grouped windows collapse N
+    round trips to ~N/window."""
+    payloads = [bytes([i]) * 300 for i in range(20)]
+
+    def run(grouped):
+        be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.02,
+                                    grouped=grouped)
+        store = ObjectStore(be, chunk_size=1024, cache_bytes=0)
+        t0 = time.monotonic()
+        refs = store.put_blobs(payloads)
+        assert store.get_blobs(refs) == payloads
+        return time.monotonic() - t0
+
+    fast, slow = run(True), run(False)
+    assert slow > 3 * fast
+
+
+def test_bandwidth_and_jitter_charge_time():
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0, bandwidth=10_000)
+    t0 = time.monotonic()
+    be.put("k", b"x" * 5000)                     # 0.5 s at 10 kB/s
+    assert time.monotonic() - t0 >= 0.4
+    jittery = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0, jitter=0.01,
+                                     seed=42)
+    jittery.put("k", b"v")                       # just exercises the path
+    assert jittery.get("k") == b"v"
+
+
+def test_fault_before_vs_after_side_effects():
+    # before: the inner backend never saw the faulted request
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0, fault_every=1,
+                                fault_mode="before")
+    be.scheduler.retries = 0
+    with pytest.raises(TransientError):
+        be.put("k", b"v")
+    assert not be.inner.exists("k")
+    # after: the side effect landed, only the response was lost
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0, fault_every=1,
+                                fault_mode="after")
+    be.scheduler.retries = 0
+    with pytest.raises(TransientError):
+        be.put("k", b"v")
+    assert be.inner.get("k") == b"v"
+
+
+def test_store_over_simulated_backend_counters_land_in_stats():
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0005, tail_every=10,
+                                tail=0.3)
+    be.scheduler.hedge_min_samples = 4
+    store = ObjectStore(be, chunk_size=256, cache_bytes=0)
+    payloads = [bytes([i]) * 600 for i in range(16)]
+    refs = store.put_blobs(payloads)
+    assert store.get_blobs(refs) == payloads
+    assert store.stats.remote_requests > 0
+    assert store.stats.hedges_issued > 0
+    assert store.stats.hedge_wins > 0            # hedging beat real tails
+    # the backend's own counters match the bound sink
+    assert be.remote_counters["hedge_wins"] == store.stats.hedge_wins
+
+
+def test_bind_store_stats_replaces_sink():
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0)
+    s1 = ObjectStore(be, cache_bytes=0)
+    s1.put_blob(b"first")
+    first = s1.stats.remote_requests
+    assert first > 0
+    s2 = ObjectStore(be, cache_bytes=0)          # rebinds the sink
+    s2.put_blob(b"second")
+    assert s1.stats.remote_requests == first     # old sink no longer fed
+    assert s2.stats.remote_requests > 0
+
+
+# ---------------------------------------------------------------------------
+# HttpBackend + DevObjectServer
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def server():
+    with DevObjectServer() as srv:
+        yield srv
+
+
+def test_http_roundtrip_and_listing(server):
+    be = HttpBackend(server.url)
+    be.put("meta/refs heads", b"v1")             # slash + space in the key
+    be.put("c-abc", b"chunk")
+    assert be.get("meta/refs heads") == b"v1"
+    assert be.exists("c-abc") and not be.exists("nope")
+    assert sorted(be.list_keys()) == ["c-abc", "meta/refs heads"]
+    assert list(be.list_keys("meta/")) == ["meta/refs heads"]
+    be.delete("c-abc")
+    be.delete("c-abc")                           # idempotent replay
+    with pytest.raises(NotFoundError):
+        be.get("c-abc")
+    assert be.get_many(["meta/refs heads", "gone"]) == [b"v1", None]
+
+
+def test_http_retries_through_injected_503s(server):
+    be = HttpBackend(server.url)
+    be.scheduler.backoff_base = 0.001
+    be.put("k", b"v")
+    server.fail_next(2)
+    assert be.get("k") == b"v"                   # retried through the 503s
+    assert be.remote_counters["retries"] >= 2
+
+
+def test_object_store_over_http(server):
+    store = ObjectStore(HttpBackend(server.url), chunk_size=1024,
+                        cache_bytes=0)
+    payloads = [b"alpha" * 100, b"beta" * 500, b""]
+    refs = store.put_blobs(payloads)
+    assert store.get_blobs(refs) == payloads
+    store.delete_blobs([refs[0]])
+    with pytest.raises(NotFoundError):
+        store.get_blob(refs[0])
+
+
+def test_dev_server_persists_to_file_backend(tmp_path):
+    from repro.core.store import FileBackend
+
+    with DevObjectServer(FileBackend(str(tmp_path / "srv"))) as srv:
+        HttpBackend(srv.url).put("k", b"persisted")
+    assert FileBackend(str(tmp_path / "srv")).get("k") == b"persisted"
+
+
+# ---------------------------------------------------------------------------
+# URL resolution + Platform/CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_backend_from_url_schemes(tmp_path):
+    assert isinstance(backend_from_url("memory://"), MemoryBackend)
+    fb = backend_from_url(f"file://{tmp_path}/cas")
+    fb.put("k", b"v")
+    assert fb.get("k") == b"v"
+    assert isinstance(backend_from_url("http://localhost:1"), HttpBackend)
+    sim = backend_from_url(
+        "memory://?rtt=0.01&jitter=0.002&tail_every=5&tail=0.1&grouped=false")
+    assert isinstance(sim, SimulatedRemoteBackend)
+    assert sim.rtt == 0.01 and sim.tail_every == 5 and not sim.grouped
+    assert is_backend_url("memory://") and not is_backend_url("/tmp/repo")
+    with pytest.raises(ValueError):
+        backend_from_url("s3://bucket")
+    with pytest.raises(ValueError):
+        backend_from_url("memory://?bogus=1")
+
+
+def test_platform_over_http_url(server):
+    from repro.core.dataset import Record
+    from repro.platform import Platform
+
+    plat = Platform.open(server.url, actor="alice")
+    plat.dataset("speech").check_in(
+        [Record("r0", b"audio-bytes" * 50, {"lang": "en"})], message="ingest")
+    snap = plat.dataset("speech").checkout()
+    assert snap.read("r0") == b"audio-bytes" * 50
+    stats = plat.store_stats()
+    assert stats["remote_requests"] > 0
+    assert stats["disk_cache"] is None           # off by default
+    # a second platform over the same server sees the data (shared store)
+    plat2 = Platform.open(server.url, actor="alice")
+    assert plat2.dataset("speech").checkout().read("r0") == \
+        b"audio-bytes" * 50
+
+
+def test_platform_url_with_disk_tier(tmp_path):
+    from repro.core.dataset import Record
+    from repro.platform import Platform
+
+    plat = Platform.open("memory://?rtt=0.001",
+                         disk_cache_bytes=1 << 20,
+                         disk_cache_dir=str(tmp_path / "tier"))
+    plat.dataset("d").check_in([Record("r", b"x" * 2000, {})], message="m")
+    plat.dataset("d").checkout().read("r")
+    stats = plat.store_stats()
+    assert stats["disk_cache"] is not None
+    assert stats["disk_cache"]["entries"] > 0
+
+
+def test_cli_store_stats_over_url(tmp_path, capsys):
+    import json
+
+    from repro.cli import main
+
+    repo = str(tmp_path / "repo")
+    f = tmp_path / "a.txt"
+    f.write_bytes(b"hello cli")
+    assert main(["--repo", repo, "check-in", "ds", str(f), "-m", "v1"]) == 0
+    capsys.readouterr()
+    assert main(["--repo", repo, "store", "stats"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    for key in ("remote_requests", "retries", "hedges_issued", "hedge_wins",
+                "disk_tier_hits", "cache", "disk_cache"):
+        assert key in out

@@ -419,3 +419,193 @@ def test_sniff_escape_hatch_restores_unconditional_compression():
     eager = ObjectStore(MemoryBackend(), compress_sniff=False)
     eager.put_blob(tiled)
     assert eager.stats.bytes_stored < len(tiled) // 2     # compressed
+
+
+# -- idempotent deletes (retry replay) ----------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["memory", "file", "minimal"])
+def test_delete_missing_keys_is_noop(kind, tmp_path):
+    """Retried grouped deletes replay against keys the first attempt already
+    removed — every backend must treat a missing key as success."""
+    backend = _make_backend(kind, tmp_path, "idem")
+    backend.put("k0", b"v0")
+    backend.put("k1", b"v1")
+    backend.delete("k0")
+    backend.delete("k0")                         # replay: no-op, no raise
+    backend.delete("never-existed")
+    backend.delete_many(["k1", "k1", "gone", "k0"])
+    assert list(backend.list_keys()) == []
+    # put replay is idempotent too (same bytes, same key)
+    backend.put_many([("k2", b"x"), ("k2", b"x")])
+    backend.put_many([("k2", b"x")])
+    assert backend.get("k2") == b"x"
+
+
+def test_file_backend_delete_missing_regression(tmp_path):
+    """Regression pin: FileBackend.delete/delete_many on absent keys must
+    not raise (retry layer replays deletes)."""
+    backend = FileBackend(str(tmp_path / "cas"))
+    backend.delete("no/such/key")
+    backend.delete_many(["a", "b", "c"])
+    backend.put("a", b"1")
+    backend.delete_many(["a", "a"])
+    assert not backend.exists("a")
+
+
+# -- flaky backend: retry/backoff replay == fault-free run --------------------
+
+
+def _flaky_pair(fault_mode, grouped, fault_every):
+    """(inner, store) with injected transient faults; rtt=0 keeps it fast."""
+    from repro.store.remote import SimulatedRemoteBackend
+
+    inner = MemoryBackend()
+    be = SimulatedRemoteBackend(inner, rtt=0.0, fault_every=fault_every,
+                                fault_mode=fault_mode, grouped=grouped)
+    be.scheduler.backoff_base = 0.001            # fast test retries
+    be.scheduler.retries = 10                    # never exhaust under races
+    return inner, ObjectStore(be, chunk_size=1024)
+
+
+@pytest.mark.parametrize("grouped", [True, False])
+@pytest.mark.parametrize("fault_mode", ["before", "after"])
+def test_flaky_backend_byte_identical_to_fault_free(grouped, fault_mode):
+    """Grouped ops + retry/backoff under injected transient faults leave the
+    backend in byte-identical state to a fault-free run.  ``after`` mode
+    (side effect applied, response lost) makes the retries replay already-
+    applied puts/deletes — the idempotency contract end to end."""
+    payloads = _payload_matrix()
+    clean_inner, clean = _flaky_pair(fault_mode, grouped, fault_every=0)
+    flaky_inner, flaky = _flaky_pair(fault_mode, grouped, fault_every=7)
+    clean_refs = clean.put_blobs(payloads)
+    flaky_refs = flaky.put_blobs(payloads)
+    assert flaky_refs == clean_refs
+    assert _backend_state(flaky_inner) == _backend_state(clean_inner)
+    assert flaky.get_blobs(flaky_refs) == payloads
+    clean.delete_blobs(clean_refs[:4])
+    flaky.delete_blobs(flaky_refs[:4])
+    assert _backend_state(flaky_inner) == _backend_state(clean_inner)
+    assert flaky.backend.remote_counters["retries"] > 0
+    assert flaky.stats.retries > 0               # surfaced in StoreStats
+
+
+# -- on-disk cache tier -------------------------------------------------------
+
+
+class _CountingBackend(MemoryBackend):
+    """Counts physical reads so tests can pin 'served from disk, not
+    backend'."""
+
+    def __init__(self):
+        super().__init__()
+        self.reads = 0
+
+    def get(self, key):
+        self.reads += 1
+        return super().get(key)
+
+    def get_many(self, keys):
+        self.reads += len(keys)
+        return super().get_many(keys)
+
+
+def test_disk_tier_warms_cold_process(tmp_path):
+    backend = _CountingBackend()
+    tier_dir = str(tmp_path / "tier")
+    s1 = ObjectStore(backend, chunk_size=1024, disk_cache_bytes=1 << 20,
+                     disk_cache_dir=tier_dir)
+    data = os.urandom(800)                       # single chunk: no manifest
+    ref = s1.put_blob(data)
+    assert s1.get_blob(ref) == data              # backend read warms tiers
+    reads = backend.reads
+    # a "cold process": fresh store (empty memory cache), same disk dir
+    s2 = ObjectStore(backend, chunk_size=1024, disk_cache_bytes=1 << 20,
+                     disk_cache_dir=tier_dir)
+    assert s2.get_blob(ref) == data
+    assert backend.reads == reads                # zero backend reads
+    assert s2.stats.disk_tier_hits == 1
+    assert s2.get_blob(ref) == data              # now in the memory tier
+    assert s2.stats.disk_tier_hits == 1
+    info = s2.disk_cache_info()
+    assert info["entries"] == 1 and info["hits"] == 1
+
+
+def test_disk_tier_reverifies_and_drops_corruption(tmp_path):
+    backend = MemoryBackend()
+    tier_dir = str(tmp_path / "tier")
+    store = ObjectStore(backend, chunk_size=1024, cache_bytes=0,
+                        disk_cache_bytes=1 << 20, disk_cache_dir=tier_dir)
+    data = os.urandom(600)
+    ref = store.put_blob(data)
+    assert store.get_blob(ref) == data           # warm the disk tier
+    path = store._disk._path(ref.digest)
+    with open(path, "wb") as f:
+        f.write(b"rotten bytes")
+    assert store.get_blob(ref) == data           # falls back to backend
+    assert store.stats.disk_tier_hits == 0       # corruption never a hit
+
+
+def test_disk_chunk_tier_lru_eviction_by_mtime(tmp_path):
+    from repro.core.store import DiskChunkTier, sha256_hex
+
+    tier = DiskChunkTier(str(tmp_path / "t"), cap_bytes=350)
+    chunks = {sha256_hex(bytes([i]) * 100): bytes([i]) * 100
+              for i in range(3)}
+    digests = list(chunks)
+    for t, d in enumerate(digests):             # all three fit (300 <= 350)
+        tier.put(d, chunks[d])
+        os.utime(tier._path(d), (1000.0 + t, 1000.0 + t))
+    # recency bump: make digests[0] (oldest insert) most recently used
+    os.utime(tier._path(digests[0]), (2000.0, 2000.0))
+    overflow = sha256_hex(b"n" * 100)
+    tier.put(overflow, b"n" * 100)               # 400 > 350: evict one LRU
+    assert tier.get(digests[1]) is None          # oldest mtime gone
+    assert tier.get(digests[0]) == chunks[digests[0]]    # bumped: survives
+    assert tier.get(digests[2]) == chunks[digests[2]]
+    assert tier.get(overflow) == b"n" * 100
+    assert tier.info()["bytes"] <= 350
+
+
+def test_disk_tier_escape_hatch_and_default_off(tmp_path):
+    assert ObjectStore(MemoryBackend()).disk_cache_info() is None
+    store = ObjectStore(MemoryBackend(), disk_cache_bytes=0,
+                        disk_cache_dir=str(tmp_path / "never"))
+    assert store.disk_cache_info() is None
+    ref = store.put_blob(b"payload")
+    assert store.get_blob(ref) == b"payload"
+    assert not os.path.exists(str(tmp_path / "never"))
+
+
+def test_delete_blobs_evicts_disk_tier(tmp_path):
+    store = ObjectStore(MemoryBackend(), chunk_size=1024,
+                        disk_cache_bytes=1 << 20,
+                        disk_cache_dir=str(tmp_path / "tier"))
+    ref = store.put_blob(b"s" * 500)
+    store.get_blob(ref)                          # warm both tiers
+    assert store._disk.get(ref.digest) is not None
+    store.delete_blobs([ref])
+    assert store._disk.get(ref.digest) is None   # disk copy gone
+    with pytest.raises(NotFoundError):
+        store.get_blob(ref)
+
+
+def test_revoked_chunks_gone_from_both_tiers(tmp_path):
+    """Revocation must leave no copy of the payload servable from the
+    memory LRU *or* the disk tier."""
+    from repro.core import DatasetManager, Record, RevocationEngine
+    from repro.core.store import sha256_hex
+
+    payload = b"right-to-be-forgotten " * 20     # single chunk
+    digest = sha256_hex(payload)
+    store = ObjectStore(MemoryBackend(), chunk_size=1024,
+                        disk_cache_bytes=1 << 20,
+                        disk_cache_dir=str(tmp_path / "tier"))
+    dm = DatasetManager(store)
+    dm.check_in("ds", [Record("bad", payload, {})], actor="u")
+    assert dm.checkout("ds", actor="u").read("bad") == payload
+    assert store._disk.get(digest) is not None   # warmed
+    RevocationEngine(dm).revoke("bad", actor="admin", reason="gdpr")
+    assert store._disk.get(digest) is None
+    with store._cache_lock:
+        assert digest not in store._cache
