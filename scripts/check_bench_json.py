@@ -30,6 +30,8 @@ REQUIRED_ROWS = {
         "remote_checkin_50ms_rtt",
         "remote_checkout_50ms_rtt",
         "remote_hedged_tail_read",
+        "remote_checkin_e2e_50ms_rtt",
+        "remote_checkin_meta_requests",
     ),
     "loader": (
         "loader_steady_state_legacy",
@@ -42,7 +44,8 @@ REQUIRED_METRICS = {
                  "commit_delta_speedup", "diff_large_speedup",
                  "checkin_dedup_speedup", "remote_checkin_speedup",
                  "remote_checkout_speedup", "remote_vs_local_ratio",
-                 "remote_hedge_wins"),
+                 "remote_hedge_wins", "remote_checkin_e2e_speedup",
+                 "remote_checkin_meta_requests"),
     "loader": ("loader_steady_state_speedup",),
 }
 # Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
@@ -64,6 +67,10 @@ RATIO_FLOORS = {
         # hedge_wins is a count, not a ratio: >= 1 proves hedging
         # demonstrably beat an injected straggler.
         "remote_hedge_wins": (1, 1),
+        # Commit-scoped meta batching: a FULL warm check_in at 50 ms RTT
+        # vs the identical stack with batching off (the pre-batch
+        # baseline, one round trip per meta key).
+        "remote_checkin_e2e_speedup": (5.0, 2.0),
     },
 }
 # Ceiling contracts: metric -> (non-smoke ceiling, smoke ceiling) — for
@@ -74,6 +81,10 @@ RATIO_FLOORS = {
 RATIO_CEILINGS = {
     "platform": {
         "remote_vs_local_ratio": (120.0, 250.0),
+        # Deterministic request-count budget (rtt=0, not a timing): one
+        # warm batched commit may spend at most a handful of meta round
+        # trips — prefetch + flush put_many + ref CAS leaves headroom.
+        "remote_checkin_meta_requests": (8.0, 8.0),
     },
 }
 

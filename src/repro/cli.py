@@ -386,7 +386,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     store_sub = p.add_subparsers(dest="store_cmd", required=True)
     store_sub.add_parser(
         "stats",
-        help="read/write/cache/remote counters + both cache tiers (JSON)")
+        help="read/write/cache/remote counters — incl. meta_requests/"
+             "meta_batched/ref_cas_retries — + both cache tiers (JSON)")
     p.set_defaults(fn=cmd_store)
 
     args = ap.parse_args(argv)

@@ -12,7 +12,12 @@ Model
   where actions form a lattice: ADMIN > WRITE > READ.  Dataset patterns are
   glob-ish (``*`` suffix wildcard) so namespaces like ``speech/*`` work.
 - Every allow/deny decision is appended to an audit log (persisted via the
-  store's meta namespace so it survives restarts).
+  store's meta namespace so it survives restarts).  The log is stored as
+  *delta segments* (``audit/seg/NNNNNNNN``) like the lineage log: a flush
+  writes only the buffered events as one new write-once segment — O(new),
+  never O(history) — and rides the commit meta batch; ``audit_log()``
+  folds the segments onto the legacy ``acl/audit`` base list and compacts
+  once enough segments pile up.
 """
 
 from __future__ import annotations
@@ -89,7 +94,9 @@ class AccessController:
 
     _GRANTS_KEY = "acl/grants"
     _GROUPS_KEY = "acl/groups"
-    _AUDIT_KEY = "acl/audit"
+    _AUDIT_KEY = "acl/audit"              # legacy full list = compaction base
+    _AUDIT_SEG_PREFIX = "audit/seg/"
+    _COMPACT_AT = 64                      # fold segments into the base list
 
     def __init__(self, store: Optional[ObjectStore] = None, open_world: bool = True):
         self.store = store
@@ -97,6 +104,7 @@ class AccessController:
         self._grants: List[_Grant] = []
         self._groups: Dict[str, Set[str]] = {}
         self._audit: List[AuditEvent] = []
+        self._next_audit_seg = 0
         self._load()
 
     # -- persistence -----------------------------------------------------------
@@ -104,10 +112,18 @@ class AccessController:
     def _load(self) -> None:
         if self.store is None:
             return
-        for g in self.store.get_meta(self._GRANTS_KEY, default=[]):
+        grants, groups = self.store.get_metas(
+            [self._GRANTS_KEY, self._GROUPS_KEY])
+        for g in grants or []:
             self._grants.append(_Grant.from_json(g))
-        for name, members in (self.store.get_meta(self._GROUPS_KEY, default={})).items():
+        for name, members in (groups or {}).items():
             self._groups[name] = set(members)
+        # Seed the next segment sequence once at load; flush still probes
+        # forward from here (another process may append concurrently).
+        seg_names = sorted(self.store.list_meta(self._AUDIT_SEG_PREFIX))
+        if seg_names:
+            self._next_audit_seg = \
+                int(seg_names[-1][len(self._AUDIT_SEG_PREFIX):]) + 1
 
     def _save(self) -> None:
         if self.store is None:
@@ -167,7 +183,7 @@ class AccessController:
         allowed = self.is_allowed(actor, action, dataset)
         ev = AuditEvent(time.time(), actor, action.name, dataset, allowed, note)
         self._audit.append(ev)
-        if self.store is not None and len(self._audit) % 64 == 0:
+        if self.store is not None and len(self._audit) >= 64:
             self.flush_audit()
         if not allowed:
             raise PermissionError_(
@@ -176,16 +192,44 @@ class AccessController:
 
     # -- audit ---------------------------------------------------------------------
 
+    def _audit_seg_key(self, seq: int) -> str:
+        return f"{self._AUDIT_SEG_PREFIX}{seq:08d}"
+
+    def pending_seg_key(self) -> str:
+        """The segment key the next flush will (most likely) claim — lets
+        a commit's meta-batch prefetch cover the flush's probe read."""
+        return self._audit_seg_key(self._next_audit_seg)
+
     def flush_audit(self) -> None:
-        if self.store is None:
+        """Persist buffered events as ONE new delta segment — O(new), not
+        O(history).  Write-once: the segment key is claimed by probing
+        forward, so concurrent appenders never overwrite each other, and
+        the write batches freely inside a commit meta batch."""
+        if self.store is None or not self._audit:
             return
-        existing = self.store.get_meta(self._AUDIT_KEY, default=[])
-        existing.extend(e.to_json() for e in self._audit)
-        self.store.put_meta(self._AUDIT_KEY, existing)
+        seq = self._next_audit_seg
+        while self.store.get_meta(self._audit_seg_key(seq)) is not None:
+            seq += 1
+        self.store.put_meta(self._audit_seg_key(seq),
+                            [e.to_json() for e in self._audit])
+        self._next_audit_seg = seq + 1
         self._audit.clear()
 
     def audit_log(self) -> List[dict]:
-        persisted = (
-            self.store.get_meta(self._AUDIT_KEY, default=[]) if self.store else []
-        )
-        return persisted + [e.to_json() for e in self._audit]
+        """Full decision history: legacy base list + every delta segment +
+        the not-yet-flushed buffer.  Reading is also when segments compact
+        (fold into the base, delete the segment keys) once ``_COMPACT_AT``
+        pile up — the lineage log's pattern."""
+        if self.store is None:
+            return [e.to_json() for e in self._audit]
+        events: List[dict] = list(
+            self.store.get_meta(self._AUDIT_KEY, default=[]))
+        seg_names = sorted(self.store.list_meta(self._AUDIT_SEG_PREFIX))
+        for items in self.store.get_metas(seg_names):
+            events.extend(items or [])
+        if len(seg_names) >= self._COMPACT_AT:
+            self.store.put_meta(self._AUDIT_KEY, events)
+            for name in seg_names:
+                self.store.delete_meta(name)
+            self._next_audit_seg = 0
+        return events + [e.to_json() for e in self._audit]

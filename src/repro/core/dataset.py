@@ -418,11 +418,13 @@ class DatasetManager:
         return info
 
     def tag_dataset(self, name: str, tag: str, actor: str) -> None:
-        self.acl.check(actor, Action.WRITE, name, note=f"tag_dataset:{tag}")
-        info = self._ensure_dataset(name, actor)
-        if tag not in info["tags"]:
-            info["tags"].append(tag)
-            self.store.put_meta(self._dataset_meta_key(name), info)
+        with self.store.meta_batch(prefetch=[self._dataset_meta_key(name)]):
+            self.acl.check(actor, Action.WRITE, name,
+                           note=f"tag_dataset:{tag}")
+            info = self._ensure_dataset(name, actor)
+            if tag not in info["tags"]:
+                info["tags"].append(tag)
+                self.store.put_meta(self._dataset_meta_key(name), info)
 
     def query_datasets(
         self,
@@ -480,56 +482,80 @@ class DatasetManager:
         ``derived_from`` — lineage node ids this version derives from.
         ``produced_by``  — workflow/component run node id.
         """
-        self.acl.check(actor, Action.WRITE, dataset, note="check_in")
-        self._ensure_dataset(dataset, actor)
+        # The whole commit runs in ONE meta-batch scope: the known read
+        # set prefetches in one grouped get, every meta write (dataset
+        # info, commit body+index, record index, lineage + audit segments)
+        # stages, and the flush lands blobs → write-once meta → the branch
+        # ref (CAS-guarded) in a handful of round trips.
+        prefetch = [
+            self._dataset_meta_key(dataset),
+            f"commits/{dataset}",
+            f"refs/{dataset}/heads/{branch}",
+            f"recindex/{dataset}",
+            self.lineage.pending_seg_key(),
+            self.acl.pending_seg_key(),
+        ]
+        with self.store.meta_batch(prefetch=prefetch):
+            self.acl.check(actor, Action.WRITE, dataset, note="check_in")
+            self._ensure_dataset(dataset, actor)
 
-        base_id = base or self.versions.get_branch(dataset, branch)
-        adds = self._store_records(records)
-        removes = list(remove_ids)
-        for rid in removes:
-            adds.pop(rid, None)  # removal wins over a same-call add
+            base_id = base or self.versions.get_branch(dataset, branch)
+            adds = self._store_records(records)
+            removes = list(remove_ids)
+            for rid in removes:
+                adds.pop(rid, None)  # removal wins over a same-call add
 
-        if replace or base_id is None:
-            manifest = Manifest(adds.values())
-            commit = self.versions.commit(
-                dataset,
-                manifest,
-                parents=[base_id] if base_id else [],
-                author=actor,
-                message=message,
-                meta=meta,
-            )
-            # Page-wise diff vs base (shared pages skip wholesale); a
-            # replace of an unchanged view costs O(pages), not O(records).
-            delta = (self.versions.diff(base_id, commit.commit_id)
-                     if base_id else VersionDiff(added=sorted(adds)))
-            n_records = len(manifest)
-        else:
-            commit, delta, n_records = self.versions.commit_delta(
-                dataset, base_id, adds, removes,
-                author=actor, message=message, meta=meta)
-        self.versions.set_branch(dataset, branch, commit.commit_id)
-        for tag in version_tags:
-            self.versions.set_tag(dataset, tag, commit.commit_id)
+            if replace or base_id is None:
+                manifest = Manifest(adds.values())
+                commit = self.versions.commit(
+                    dataset,
+                    manifest,
+                    parents=[base_id] if base_id else [],
+                    author=actor,
+                    message=message,
+                    meta=meta,
+                )
+                # Page-wise diff vs base (shared pages skip wholesale); a
+                # replace of an unchanged view costs O(pages), not
+                # O(records).
+                delta = (self.versions.diff(base_id, commit.commit_id)
+                         if base_id else VersionDiff(added=sorted(adds)))
+                n_records = len(manifest)
+            else:
+                commit, delta, n_records = self.versions.commit_delta(
+                    dataset, base_id, adds, removes,
+                    author=actor, message=message, meta=meta)
+            self.versions.set_branch(dataset, branch, commit.commit_id)
+            for tag in version_tags:
+                self.versions.set_tag(dataset, tag, commit.commit_id)
 
-        # Record-containment index (drives revocation without full scans):
-        # only the records this commit actually added/changed/removed are
-        # indexed, so the blob grows O(delta) per commit, not O(records).
-        self._index_records(dataset, commit.commit_id, delta)
+            # Record-containment index (drives revocation without full
+            # scans): only the records this commit actually
+            # added/changed/removed are indexed, so the blob grows
+            # O(delta) per commit, not O(records).
+            self._index_records(dataset, commit.commit_id, delta)
 
-        # Lineage: version node + derivation/production edges.
-        vnode = version_node_id(dataset, commit.commit_id)
-        self.lineage.add_node(vnode, NodeKind.DATASET_VERSION,
-                              dataset=dataset, commit=commit.commit_id,
-                              n_records=n_records)
-        if base_id:
-            self.lineage.add_edge(vnode, version_node_id(dataset, base_id),
-                                  EdgeKind.DERIVED_FROM)
-        for src in derived_from:
-            self.lineage.add_edge(vnode, src, EdgeKind.DERIVED_FROM)
-        if produced_by:
-            self.lineage.add_edge(vnode, produced_by, EdgeKind.PRODUCED_BY)
-        self.lineage.flush()
+            # Lineage: version node + derivation/production edges.
+            vnode = version_node_id(dataset, commit.commit_id)
+            self.lineage.add_node(vnode, NodeKind.DATASET_VERSION,
+                                  dataset=dataset, commit=commit.commit_id,
+                                  n_records=n_records)
+            if base_id:
+                self.lineage.add_edge(vnode,
+                                      version_node_id(dataset, base_id),
+                                      EdgeKind.DERIVED_FROM)
+            for src in derived_from:
+                self.lineage.add_edge(vnode, src, EdgeKind.DERIVED_FROM)
+            if produced_by:
+                self.lineage.add_edge(vnode, produced_by,
+                                      EdgeKind.PRODUCED_BY)
+            self.lineage.flush()
+            # Commit boundary = audit boundary: buffered allow/deny
+            # decisions persist with the commit (free inside the batch)
+            # instead of waiting for the every-64th-event trigger.
+            self.acl.flush_audit()
+        # Listeners run after the flush: a triggered workflow's own
+        # check_ins must see (and build on) fully-landed state.
         for fn in self._commit_listeners:
             fn(dataset, commit)
         return commit
@@ -716,15 +742,17 @@ class DatasetManager:
         snap = Snapshot(snap_id, plan.dataset, plan.commit_id, entries,
                         self.store)
         if register:
-            self.lineage.add_node(
-                snap_id, NodeKind.SNAPSHOT,
-                dataset=plan.dataset, commit=plan.commit_id,
-                n_records=len(entries), content=snap.content_digest(),
-                query=digest)
-            self.lineage.add_edge(
-                snap_id, version_node_id(plan.dataset, plan.commit_id),
-                EdgeKind.DERIVED_FROM)
-            self.lineage.flush()
+            with self.store.meta_batch(
+                    prefetch=[self.lineage.pending_seg_key()]):
+                self.lineage.add_node(
+                    snap_id, NodeKind.SNAPSHOT,
+                    dataset=plan.dataset, commit=plan.commit_id,
+                    n_records=len(entries), content=snap.content_digest(),
+                    query=digest)
+                self.lineage.add_edge(
+                    snap_id, version_node_id(plan.dataset, plan.commit_id),
+                    EdgeKind.DERIVED_FROM)
+                self.lineage.flush()
         return snap
 
     # ------------------------------------------------------------------ misc ops

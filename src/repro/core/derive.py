@@ -522,29 +522,36 @@ class DerivationEngine:
             )
             res.output_commit = commit.commit_id
             res.content_digest = self._manifest_digest(commit.tree)
-            if deriv is not None:
+
+        # Post-commit bookkeeping (lineage edge, cache pointer) rides one
+        # meta batch: the check_in above stays outside so its commit
+        # listeners observe fully-landed state.
+        store = self.dm.store
+        with store.meta_batch(prefetch=[DerivationCache._PTR,
+                                        self.dm.lineage.pending_seg_key()]):
+            if res.output_commit is not None and deriv is not None:
                 lin = self.dm.lineage
                 lin.add_edge(version_node_id(output_dataset,
-                                             commit.commit_id),
+                                             res.output_commit),
                              deriv.node_id, EdgeKind.PRODUCED_BY)
                 lin.flush()
 
-        if cacheable and update_cache and res.output_commit is not None:
-            with self._lock:
-                self.cache.put(cache_key, {
-                    "input_commit": plan.commit_id,
-                    "input_dataset": plan.dataset,
-                    "query": qd,
-                    "pipeline": pfp,
-                    "output_dataset": output_dataset,
-                    "output_commit": res.output_commit,
-                    "content": res.content_digest,
-                    "prov": prov_digest,
-                    "prov_bytes": prov_bytes,
-                    "n_inputs": res.n_inputs,
-                    "n_outputs": res.n_outputs,
-                    "created_at": time.time(),
-                })
+            if cacheable and update_cache and res.output_commit is not None:
+                with self._lock:
+                    self.cache.put(cache_key, {
+                        "input_commit": plan.commit_id,
+                        "input_dataset": plan.dataset,
+                        "query": qd,
+                        "pipeline": pfp,
+                        "output_dataset": output_dataset,
+                        "output_commit": res.output_commit,
+                        "content": res.content_digest,
+                        "prov": prov_digest,
+                        "prov_bytes": prov_bytes,
+                        "n_inputs": res.n_inputs,
+                        "n_outputs": res.n_outputs,
+                        "created_at": time.time(),
+                    })
         return res
 
     # ------------------------------------------------------------------ pieces

@@ -108,13 +108,18 @@ class LineageGraph:
     def _seg_key(self, seq: int) -> str:
         return f"{self._SEG_PREFIX}{seq:08d}"
 
+    def pending_seg_key(self) -> str:
+        """The segment key the next flush will (most likely) claim — lets
+        a commit's meta-batch prefetch cover the flush's probe read."""
+        return self._seg_key(self._next_seg)
+
     def _load(self) -> None:
         if self.store is None:
             return
         items = list(self.store.get_meta(self._KEY, default=[]))
         seg_names = sorted(self.store.list_meta(self._SEG_PREFIX))
-        for name in seg_names:
-            items.extend(self.store.get_meta(name, default=[]))
+        for seg_items in self.store.get_metas(seg_names):
+            items.extend(seg_items or [])
         for item in items:
             self._index_item(item)
         if len(seg_names) >= self._COMPACT_AT:

@@ -144,20 +144,27 @@ class RevocationEngine:
             else:
                 report.downstream_other.append(node_id)
 
-        # Bookkeeping: tombstone + persistent revocation log + lineage event.
-        stones = self.tombstones()
-        stones[record_id] = {
-            "ts": report.timestamp, "actor": actor, "reason": reason,
-            "digests": sorted(digests),
-        }
-        dm.store.put_meta(self._TOMBSTONES, stones)
-        log = dm.store.get_meta(self._LOG, default=[])
-        log.append(report.to_json())
-        dm.store.put_meta(self._LOG, log)
-        ev = f"revocation:{record_id}:{int(report.timestamp)}"
-        dm.lineage.add_node(ev, NodeKind.EXTERNAL, kind_detail="revocation",
-                            record=record_id, actor=actor)
-        dm.lineage.flush()
+        # Bookkeeping: tombstone + persistent revocation log + lineage event,
+        # batched into one meta flush.  The check_ins and the physical
+        # delete_blobs above stay OUTSIDE the scope: payload deletion must
+        # not be deferrable or replayed from a staged buffer.
+        with dm.store.meta_batch(prefetch=[
+                self._TOMBSTONES, self._LOG,
+                dm.lineage.pending_seg_key()]):
+            stones = self.tombstones()
+            stones[record_id] = {
+                "ts": report.timestamp, "actor": actor, "reason": reason,
+                "digests": sorted(digests),
+            }
+            dm.store.put_meta(self._TOMBSTONES, stones)
+            log = dm.store.get_meta(self._LOG, default=[])
+            log.append(report.to_json())
+            dm.store.put_meta(self._LOG, log)
+            ev = f"revocation:{record_id}:{int(report.timestamp)}"
+            dm.lineage.add_node(ev, NodeKind.EXTERNAL,
+                                kind_detail="revocation",
+                                record=record_id, actor=actor)
+            dm.lineage.flush()
         return report
 
     # -- read-side integration ------------------------------------------------------

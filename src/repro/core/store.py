@@ -47,6 +47,19 @@ Design
 - Garbage collection is mark-and-sweep from a caller-provided root set
   (commits / manifests / lineage heads own references).
 
+- **Commit-scoped metadata batching**: ``store.meta_batch()`` opens a
+  :class:`MetaBatch` scope on the current thread.  Inside it, mutable
+  ``meta/`` reads are served from a grouped prefetch plus read-through
+  (one ``get_many`` per miss group) and ``meta/`` writes are *staged*;
+  content-addressed blob writes are staged too.  On scope exit everything
+  flushes in happens-before order — data blobs (one probe + one grouped
+  write), then write-once meta (ONE grouped ``put_metas``), then mutable
+  ``refs/`` *last*, each through the :meth:`StorageBackend.put_if`
+  compare-and-swap guard — so batching collapses a commit's ~16 meta
+  round trips into a handful without widening the lost-update window.
+  The resulting backend state is byte-identical to the unbatched path,
+  and a flush failure surfaces like the first failing single write.
+
 - **Tiered chunk cache**: below the memory LRU sits an optional on-disk
   tier (:class:`DiskChunkTier`, ``disk_cache_bytes=`` /
   ``disk_cache_dir=``).  Chunks are immutable and content-addressed, so
@@ -73,6 +86,7 @@ import os
 import struct
 import tempfile
 import threading
+import time
 import zlib
 from abc import ABC, abstractmethod
 from collections import OrderedDict
@@ -86,6 +100,7 @@ __all__ = [
     "FileBackend",
     "BlobRef",
     "ObjectStore",
+    "MetaBatch",
     "DiskChunkTier",
     "IntegrityError",
     "NotFoundError",
@@ -179,6 +194,29 @@ class StorageBackend(ABC):
         for key in keys:
             self.delete(key)
 
+    # -- optional conditional write (loop fallback) --------------------------
+
+    def put_if(self, key: str, expected: Optional[bytes],
+               data: bytes) -> bool:
+        """Conditional put: write ``data`` only while the key's current
+        value is ``expected`` (``None`` ⇒ the key must be absent).
+        Returns True when the write applied, False on a mismatch.
+
+        This fallback is get-compare-put in two round trips *without*
+        backend-side atomicity; backends with a native primitive
+        (If-Match, generation preconditions, a process-wide lock) override
+        it.  Either way the caller's retry loop turns the race window into
+        a detected conflict instead of a silent lost update.
+        """
+        try:
+            current: Optional[bytes] = self.get(key)
+        except NotFoundError:
+            current = None
+        if current != expected:
+            return False
+        self.put(key, data)
+        return True
+
 
 class MemoryBackend(StorageBackend):
     """In-process store for tests and ephemeral pipelines."""
@@ -233,6 +271,15 @@ class MemoryBackend(StorageBackend):
         with self._lock:
             for key in keys:
                 self._data.pop(key, None)
+
+    def put_if(self, key: str, expected: Optional[bytes],
+               data: bytes) -> bool:
+        # Natively atomic: compare and swap under the one store lock.
+        with self._lock:
+            if self._data.get(key) != expected:
+                return False
+            self._data[key] = bytes(data)
+            return True
 
 
 class FileBackend(StorageBackend):
@@ -335,6 +382,51 @@ class FileBackend(StorageBackend):
             except FileNotFoundError:
                 pass
 
+    _LOCK_STALE_S = 10.0
+
+    def put_if(self, key: str, expected: Optional[bytes],
+               data: bytes) -> bool:
+        # Atomic across processes sharing one filesystem: writers serialize
+        # on an O_CREAT|O_EXCL lock file in a dedicated ``__locks__`` dir
+        # (outside the two-level fan-out, so listings never see it).  A
+        # lock left behind by a crashed writer is broken after 10 s.
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        lock_dir = os.path.join(self.root, "__locks__")
+        os.makedirs(lock_dir, exist_ok=True)
+        lock = os.path.join(lock_dir, self._encode_key(key))
+        deadline = time.monotonic() + 2 * self._LOCK_STALE_S
+        while True:
+            try:
+                os.close(os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+                break
+            except FileExistsError:
+                try:
+                    if time.time() - os.path.getmtime(lock) \
+                            > self._LOCK_STALE_S:
+                        os.unlink(lock)
+                        continue
+                except OSError:
+                    continue        # holder released between stat and unlink
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"put_if lock on {key!r} stuck")
+                time.sleep(0.01)
+        try:
+            try:
+                with open(path, "rb") as f:
+                    current: Optional[bytes] = f.read()
+            except FileNotFoundError:
+                current = None
+            if current != expected:
+                return False
+            self._write_atomic(path, data)
+            return True
+        finally:
+            try:
+                os.unlink(lock)
+            except FileNotFoundError:
+                pass
+
     @staticmethod
     def _listdir(path: str) -> List[str]:
         try:
@@ -418,6 +510,14 @@ class StoreStats:
     # Second cache tier: chunk reads served from the on-disk tier instead
     # of the backend (the memory LRU counts separately as ``cache_hits``).
     disk_tier_hits: int = 0
+    # Meta-namespace counters: ``meta_requests`` counts meta *round trips*
+    # (a grouped prefetch/flush counts once, like ``exists_probes``);
+    # ``meta_batched`` counts writes absorbed into a MetaBatch instead of
+    # paying their own round trip; ``ref_cas_retries`` counts
+    # compare-and-swap conflicts on mutable refs that forced a re-read.
+    meta_requests: int = 0
+    meta_batched: int = 0
+    ref_cas_retries: int = 0
 
 
 DEFAULT_CACHE_BYTES = 64 * 1024 * 1024
@@ -574,6 +674,7 @@ class ObjectStore:
         compress_sniff: bool = True,
         disk_cache_bytes: int = 0,
         disk_cache_dir: Optional[str] = None,
+        meta_batching: bool = True,
     ) -> None:
         if chunk_size <= 0:
             raise ValueError("chunk_size must be positive")
@@ -606,6 +707,18 @@ class ObjectStore:
                 disk_cache_dir = os.path.join(tempfile.gettempdir(),
                                               "repro-chunk-cache")
             self._disk = DiskChunkTier(disk_cache_dir, disk_cache_bytes)
+        # Commit-scoped metadata batching.  The active scope is per-thread
+        # (``_batch_tls``) so concurrent committers never share staging
+        # state, but staged-yet-unflushed chunk/manifest bytes live in a
+        # store-global refcounted table so reads from ANY thread can be
+        # served while a batch is open.  ``meta_batching=False`` turns
+        # every ``meta_batch()`` scope into a no-op — the measurable
+        # pre-batch baseline.
+        self.meta_batching = bool(meta_batching)
+        self._batch_tls = threading.local()
+        self._pending_lock = threading.Lock()
+        self._pending_chunks: Dict[str, Tuple[bytes, int]] = {}
+        self._pending_manifests: Dict[str, Tuple[bytes, int]] = {}
 
     # -- verified-once chunk cache -----------------------------------------
 
@@ -669,6 +782,68 @@ class ObjectStore:
         info = self._disk.info()
         info["hits"] = self.stats.disk_tier_hits
         return info
+
+    # -- commit-scoped meta batching -----------------------------------------
+
+    def meta_batch(self, prefetch: Sequence[str] = ()) -> "MetaBatch":
+        """Open a commit-scoped :class:`MetaBatch` on this thread.
+
+        ``with store.meta_batch(prefetch=[...]):`` — inside the scope,
+        ``meta/`` reads come from one grouped prefetch plus read-through
+        for misses, and ``meta/`` writes (plus content-addressed blob
+        writes) are staged and flushed on exit in happens-before order:
+        data blobs → write-once meta (ONE grouped put) → mutable ``refs/``
+        last, each through the :meth:`put_meta_if` CAS guard.  Scopes
+        nest: an inner ``meta_batch()`` joins the outer one and only the
+        outermost exit flushes.  If the body raises, staged writes are
+        discarded.  With ``meta_batching=False`` the scope is a no-op and
+        every operation goes straight to the backend.
+        """
+        return MetaBatch(self, prefetch)
+
+    def _active_batch(self) -> Optional["MetaBatch"]:
+        if not self.meta_batching:
+            return None
+        return getattr(self._batch_tls, "batch", None)
+
+    # Staged-but-unflushed chunk/manifest bytes, refcounted per open batch
+    # so two concurrent batches staging the same digest both stay readable.
+
+    def _pending_add(self, table: Dict[str, Tuple[bytes, int]],
+                     digest: str, raw: bytes) -> None:
+        with self._pending_lock:
+            ent = table.get(digest)
+            table[digest] = (raw, 1) if ent is None else (ent[0], ent[1] + 1)
+
+    def _pending_release(self, chunk_digests: Iterable[str],
+                         man_digests: Iterable[str]) -> None:
+        with self._pending_lock:
+            for table, digests in ((self._pending_chunks, chunk_digests),
+                                   (self._pending_manifests, man_digests)):
+                for digest in digests:
+                    ent = table.get(digest)
+                    if ent is None:
+                        continue
+                    if ent[1] <= 1:
+                        del table[digest]
+                    else:
+                        table[digest] = (ent[0], ent[1] - 1)
+
+    def _pending_get(self, table: Dict[str, Tuple[bytes, int]],
+                     digest: str) -> Optional[bytes]:
+        if not table:
+            return None
+        with self._pending_lock:
+            ent = table.get(digest)
+            return None if ent is None else ent[0]
+
+    def blob_is_staged(self, digest: str) -> bool:
+        """True while ``digest`` is staged (unflushed) in an open batch."""
+        if not (self._pending_chunks or self._pending_manifests):
+            return False
+        with self._pending_lock:
+            return (digest in self._pending_chunks
+                    or digest in self._pending_manifests)
 
     # -- chunk plumbing ----------------------------------------------------
 
@@ -762,7 +937,11 @@ class ObjectStore:
         misses: List[str] = []
         for digest in dict.fromkeys(digests):
             self.stats.gets += 1
-            raw = self._cache_get(digest)
+            # Staged-but-unflushed batch writes are readable immediately
+            # (read-your-writes inside and across threads during a batch).
+            raw = self._pending_get(self._pending_chunks, digest)
+            if raw is None:
+                raw = self._cache_get(digest)
             if raw is None:
                 raw = self._disk_get(digest)
             if raw is None:
@@ -791,6 +970,12 @@ class ObjectStore:
         """Store arbitrary bytes; returns a stable content-addressed ref."""
         data = bytes(data)
         self.stats.put_calls += 1
+        batch = self._active_batch()
+        if batch is not None:
+            # Content addresses are computable locally, so the write can
+            # join the batch's single grouped probe + put at flush time.
+            self.stats.bytes_in += len(data)
+            return batch.stage_blob(data)
         if len(data) <= self.chunk_size:
             digest = self._put_chunk(data)
             return BlobRef(digest, len(data), 1)
@@ -865,6 +1050,17 @@ class ObjectStore:
                 manifests.setdefault(top, man)
                 refs.append(BlobRef(top, len(data), n))
             pos += n
+
+        # 3b. Inside a meta batch the probe and write are deferred to the
+        #     batch flush (refs are already final — content addressing).
+        batch = self._active_batch()
+        if batch is not None:
+            for raw, digest in zip(flat, digests):
+                batch.stage_chunk(digest, raw)
+            for top, man in manifests.items():
+                batch.stage_manifest(top, man)
+            batch.maybe_spill()
+            return refs
 
         # 4. One grouped existence probe over distinct chunks + manifests.
         keys = [self._CHUNK + d for d in unique]
@@ -946,13 +1142,28 @@ class ObjectStore:
             else:
                 parsed.append((ref, None))
         # One grouped manifest pass for every ref not known single-chunk.
+        # Digests staged in an open batch resolve without a backend probe:
+        # a staged manifest serves its bytes, a staged chunk is by
+        # construction a single-chunk blob.
         man_pos = [i for i, (_, n) in enumerate(parsed) if n != 1]
+        staged_man: Dict[int, bytes] = {}
+        if self._pending_chunks or self._pending_manifests:
+            with self._pending_lock:
+                keep: List[int] = []
+                for i in man_pos:
+                    digest = parsed[i][0]
+                    ent = self._pending_manifests.get(digest)
+                    if ent is not None:
+                        staged_man[i] = ent[0]
+                    elif digest not in self._pending_chunks:
+                        keep.append(i)
+                man_pos = keep
         man_raw = self.backend.get_many(
             [self._BLOBMAN + parsed[i][0] for i in man_pos]) if man_pos \
             else []
         plans: List[Tuple[List[str], Optional[int]]] = [
             ([digest], None) for digest, _ in parsed]
-        for i, raw in zip(man_pos, man_raw):
+        for i, raw in list(staged_man.items()) + list(zip(man_pos, man_raw)):
             if raw is not None:
                 man = json.loads(raw)
                 plans[i] = (list(man["chunks"]), int(man["size"]))
@@ -969,8 +1180,28 @@ class ObjectStore:
 
     def has_blob(self, digest: str) -> bool:
         # One grouped probe, not two sequential round trips.
-        return any(self.backend.exists_many(
-            [self._CHUNK + digest, self._BLOBMAN + digest]))
+        return self.has_blobs([digest])[0]
+
+    def has_blobs(self, digests: Sequence[str]) -> List[bool]:
+        """Grouped membership: ONE probe round trip answers every digest
+        (both key forms each); staged-but-unflushed batch writes count."""
+        out: List[Optional[bool]] = [None] * len(digests)
+        if self._pending_chunks or self._pending_manifests:
+            with self._pending_lock:
+                for i, digest in enumerate(digests):
+                    if (digest in self._pending_chunks
+                            or digest in self._pending_manifests):
+                        out[i] = True
+        miss = [i for i, hit in enumerate(out) if hit is None]
+        if miss:
+            keys: List[str] = []
+            for i in miss:
+                keys.append(self._CHUNK + digests[i])
+                keys.append(self._BLOBMAN + digests[i])
+            present = self.backend.exists_many(keys)
+            for j, i in enumerate(miss):
+                out[i] = present[2 * j] or present[2 * j + 1]
+        return [bool(hit) for hit in out]
 
     def delete_blob(self, ref) -> None:
         """Physically remove a blob (used by revocation + GC)."""
@@ -991,16 +1222,26 @@ class ObjectStore:
         man_keys = [self._BLOBMAN + d for d in digests]
         manifests = self.backend.get_many(man_keys)
         doomed: List[str] = []
+        dead_chunks: List[str] = []
         for digest, man_key, raw in zip(digests, man_keys, manifests):
             if raw is not None:
                 man = json.loads(raw)
                 for d in man["chunks"]:
                     self._cache_evict(d)
+                    dead_chunks.append(d)
                     doomed.append(self._CHUNK + d)
                 doomed.append(man_key)
             else:
                 self._cache_evict(digest)
+                dead_chunks.append(digest)
                 doomed.append(self._CHUNK + digest)
+        # Drop any staged copies outright (all refcounts): a later batch
+        # flush must never resurrect a physically deleted payload.
+        with self._pending_lock:
+            for d in dead_chunks:
+                self._pending_chunks.pop(d, None)
+            for d in digests:
+                self._pending_manifests.pop(d, None)
         self.backend.delete_many(doomed)
 
     # -- JSON convenience (commits, manifests, graphs) -----------------------
@@ -1027,37 +1268,98 @@ class ObjectStore:
 
     # -- mutable metadata (refs live here, not content-addressed) ------------
 
+    @staticmethod
+    def _meta_bytes(obj) -> bytes:
+        # THE serialization for ``meta/`` values.  Batched writes, unbatched
+        # writes and CAS expected-value encodings must all agree
+        # byte-for-byte, or batching would not be state-identical.
+        return json.dumps(obj, sort_keys=True).encode()
+
     def put_meta(self, name: str, obj) -> None:
-        self.backend.put(self.META + name, json.dumps(obj, sort_keys=True).encode())
+        data = self._meta_bytes(obj)
+        batch = self._active_batch()
+        if batch is not None:
+            batch.stage_meta(name, data)
+            return
+        self.stats.meta_requests += 1
+        self.backend.put(self.META + name, data)
 
     def put_metas(self, items: Sequence[Tuple[str, object]]) -> None:
         """Grouped :meth:`put_meta` (meta keys are mutable — always
         written, so ``put_many``'s unconditional contract fits exactly)."""
+        batch = self._active_batch()
+        if batch is not None:
+            for name, obj in items:
+                batch.stage_meta(name, self._meta_bytes(obj))
+            return
+        self.stats.meta_requests += 1
         self.backend.put_many(
-            [(self.META + name, json.dumps(obj, sort_keys=True).encode())
+            [(self.META + name, self._meta_bytes(obj))
              for name, obj in items])
+
+    def put_meta_if(self, name: str, expected, value) -> bool:
+        """Compare-and-swap on a mutable meta key.
+
+        ``expected`` is the object the caller last observed (``None`` ⇒
+        the key must still be absent); returns True when the write
+        applied.  Never staged: the conditional check IS the ordering
+        primitive, so it always goes to the backend immediately — the
+        batch flush uses it to land mutable ``refs/`` last without
+        widening the lost-update window.
+        """
+        self.stats.meta_requests += 1
+        return self.backend.put_if(
+            self.META + name,
+            None if expected is None else self._meta_bytes(expected),
+            self._meta_bytes(value))
 
     def get_meta(self, name: str, default=None):
         # Absence-is-an-answer: one round trip, not exists + get.
-        try:
-            raw = self.backend.get(self.META + name)
-        except NotFoundError:
-            return default
-        return json.loads(raw.decode())
+        batch = self._active_batch()
+        if batch is not None:
+            raw = batch.fetch_raw([name])[name]
+        else:
+            self.stats.meta_requests += 1
+            try:
+                raw = self.backend.get(self.META + name)
+            except NotFoundError:
+                raw = None
+        # Parse fresh on every read: callers mutate the returned object
+        # (read-modify-write), so cached raw bytes must never alias.
+        return default if raw is None else json.loads(raw.decode())
 
     def get_metas(self, names: Sequence[str], default=None) -> List:
         """Grouped :meth:`get_meta`: ONE round trip for all names
         (membership and payload together via ``get_many``)."""
-        raws = self.backend.get_many([self.META + n for n in names])
+        batch = self._active_batch()
+        if batch is not None:
+            got = batch.fetch_raw(list(names))
+            raws = [got[n] for n in names]
+        else:
+            self.stats.meta_requests += 1
+            raws = self.backend.get_many([self.META + n for n in names])
         return [default if raw is None else json.loads(raw.decode())
                 for raw in raws]
 
     def delete_meta(self, name: str) -> None:
+        # Write-through even inside a batch (deletes are rare on the commit
+        # path and ordering against staged puts stays trivially correct:
+        # a staged value for the name is dropped, a later staged put of
+        # the same name lands at flush, after this delete).
+        batch = self._active_batch()
+        if batch is not None:
+            batch.forget(name)
+        self.stats.meta_requests += 1
         self.backend.delete(self.META + name)
 
     def list_meta(self, prefix: str = "") -> List[str]:
+        self.stats.meta_requests += 1
         plen = len(self.META)
-        return [k[plen:] for k in self.backend.list_keys(self.META + prefix)]
+        names = [k[plen:] for k in self.backend.list_keys(self.META + prefix)]
+        batch = self._active_batch()
+        if batch is not None:
+            names = batch.merge_listing(prefix, names)
+        return names
 
     # -- garbage collection ---------------------------------------------------
 
@@ -1097,3 +1399,266 @@ class ObjectStore:
                 self._cache_evict(k[len(self._CHUNK):])
         self.backend.delete_many(dead)
         return len(dead)
+
+
+# Marks a staged ref whose pre-image was never observed inside the scope;
+# the flush resolves it with one grouped read before the CAS pass.
+_UNOBSERVED = object()
+
+
+class MetaBatch:
+    """Commit-scoped grouping layer over ``meta/`` (and the commit's
+    content-addressed writes).  Obtain via :meth:`ObjectStore.meta_batch`.
+
+    A *pure grouping* layer: it changes when round trips happen, never
+    what lands in the backend.
+
+    - **Reads** are served staged-first (read-your-writes), then from raw
+      bytes already observed this scope, then read-through — one grouped
+      ``get_many`` per miss group.  Values are parsed fresh per read so
+      callers that mutate returned objects never alias the cache.
+    - **Writes** stage: write-once keys (commit bodies, lineage/audit
+      segments, index pointers) flush as ONE grouped put; mutable
+      ``refs/`` flush LAST, each through the ``put_if`` compare-and-swap
+      guard with the pre-image observed in-scope as the expected value —
+      a concurrent writer makes the CAS fail cleanly (counted in
+      ``ref_cas_retries``) instead of being silently overwritten.
+    - **Blobs** stage too (content addresses are computable locally), so
+      a whole commit flushes as: one existence probe + one grouped blob
+      put → one grouped meta put → refs.  Memory is bounded: past
+      ``_SPILL_BYTES`` of staged payload the blob portion flushes early.
+    - Scopes **nest** (an inner scope joins the outer); only the
+      outermost exit flushes.  If the body raises, staged state is
+      discarded and nothing is written — strictly cleaner than the
+      unbatched path's partial prefix.  A flush failure propagates like
+      the first failing single write would have.
+    """
+
+    _REFS = "refs/"
+    _CAS_MAX_RETRIES = 16
+    _SPILL_BYTES = 48 * 1024 * 1024
+
+    def __init__(self, store: ObjectStore, prefetch: Sequence[str] = ()):
+        self.store = store
+        self._prefetch = [str(n) for n in prefetch]
+        self._owner = False
+        # Raw bytes observed from the backend this scope (None = absent).
+        self._cache: Dict[str, Optional[bytes]] = {}
+        self._staged: "OrderedDict[str, bytes]" = OrderedDict()
+        self._staged_refs: "OrderedDict[str, bytes]" = OrderedDict()
+        self._expected: Dict[str, object] = {}
+        self._chunks: "OrderedDict[str, None]" = OrderedDict()
+        self._manifests: "OrderedDict[str, None]" = OrderedDict()
+        self._chunk_stages = 0      # occurrences, for dedup accounting
+        self._staged_bytes = 0
+
+    # -- scope lifecycle ----------------------------------------------------
+
+    def __enter__(self) -> "MetaBatch":
+        store = self.store
+        if not store.meta_batching:
+            return self          # disabled: a null scope, nothing routes here
+        active = getattr(store._batch_tls, "batch", None)
+        if active is None:
+            store._batch_tls.batch = self
+            self._owner = True
+            active = self
+        if self._prefetch:
+            active.fetch_raw(self._prefetch)
+        return active
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if not self._owner:
+            return False
+        self.store._batch_tls.batch = None
+        try:
+            if exc_type is None:
+                self._flush()
+        finally:
+            self._discard()
+        return False
+
+    # -- meta staging / reads ----------------------------------------------
+
+    def fetch_raw(self, names: Sequence[str]) -> Dict[str, Optional[bytes]]:
+        """Raw bytes for each name: staged > observed > ONE grouped read."""
+        store = self.store
+        out: Dict[str, Optional[bytes]] = {}
+        missing: List[str] = []
+        for name in names:
+            if name in self._staged_refs:
+                out[name] = self._staged_refs[name]
+            elif name in self._staged:
+                out[name] = self._staged[name]
+            elif name in self._cache:
+                out[name] = self._cache[name]
+            elif name not in missing:
+                missing.append(name)
+        if missing:
+            store.stats.meta_requests += 1
+            raws = store.backend.get_many(
+                [store.META + n for n in missing])
+            for name, raw in zip(missing, raws):
+                self._cache[name] = raw
+                out[name] = raw
+        return out
+
+    def stage_meta(self, name: str, data: bytes) -> None:
+        store = self.store
+        store.stats.meta_batched += 1
+        if name.startswith(self._REFS):
+            if name not in self._expected:
+                # CAS pre-image: what this scope observed (absence included);
+                # never-observed refs get one grouped read at flush time.
+                self._expected[name] = self._cache.get(name, _UNOBSERVED)
+            self._staged_refs[name] = data
+        else:
+            self._staged[name] = data
+
+    def forget(self, name: str) -> None:
+        """A write-through delete ran: drop staged state, remember absence."""
+        self._staged.pop(name, None)
+        self._staged_refs.pop(name, None)
+        self._expected.pop(name, None)
+        self._cache[name] = None
+
+    def merge_listing(self, prefix: str, names: Iterable[str]) -> List[str]:
+        out = set(names)
+        for table in (self._staged, self._staged_refs):
+            out.update(n for n in table if n.startswith(prefix))
+        return sorted(out)
+
+    # -- blob staging --------------------------------------------------------
+
+    def stage_chunk(self, digest: str, raw: bytes) -> None:
+        self._chunk_stages += 1
+        if digest not in self._chunks:
+            self._chunks[digest] = None
+            self._staged_bytes += len(raw)
+            self.store._pending_add(self.store._pending_chunks, digest, raw)
+
+    def stage_manifest(self, digest: str, raw: bytes) -> None:
+        if digest not in self._manifests:
+            self._manifests[digest] = None
+            self.store._pending_add(
+                self.store._pending_manifests, digest, raw)
+
+    def stage_blob(self, data: bytes) -> BlobRef:
+        store = self.store
+        if len(data) <= store.chunk_size:
+            digest = sha256_hex(data)
+            self.stage_chunk(digest, data)
+            ref = BlobRef(digest, len(data), 1)
+        else:
+            chunk_digests: List[str] = []
+            for off in range(0, len(data), store.chunk_size):
+                piece = data[off:off + store.chunk_size]
+                digest = sha256_hex(piece)
+                chunk_digests.append(digest)
+                self.stage_chunk(digest, piece)
+            manifest = store._blob_manifest(chunk_digests, len(data))
+            top = sha256_hex(manifest)
+            self.stage_manifest(top, manifest)
+            ref = BlobRef(top, len(data), len(chunk_digests))
+        self.maybe_spill()
+        return ref
+
+    def maybe_spill(self) -> None:
+        if self._staged_bytes >= self._SPILL_BYTES:
+            self._flush_blobs()
+
+    # -- flush ---------------------------------------------------------------
+
+    def _flush_blobs(self) -> None:
+        """One grouped existence probe + one grouped write for every blob
+        staged so far, then release the pending bytes."""
+        store = self.store
+        if not self._chunks and not self._manifests:
+            return
+        with store._pending_lock:
+            chunk_items = [(d, store._pending_chunks[d][0])
+                           for d in self._chunks
+                           if d in store._pending_chunks]
+            man_items = [(d, store._pending_manifests[d][0])
+                         for d in self._manifests
+                         if d in store._pending_manifests]
+        keys = [store._CHUNK + d for d, _ in chunk_items]
+        keys.extend(store._BLOBMAN + d for d, _ in man_items)
+        present = store.backend.exists_many(keys) if keys else []
+        store.stats.exists_probes += 1
+        n_chunks = len(chunk_items)
+        missing = [(d, raw) for (d, raw), hit
+                   in zip(chunk_items, present[:n_chunks]) if not hit]
+        encoded = store._encode_chunks([raw for _, raw in missing])
+        items: List[Tuple[str, bytes]] = [
+            (store._CHUNK + d, enc)
+            for (d, _), enc in zip(missing, encoded)]
+        items.extend(
+            (store._BLOBMAN + d, raw)
+            for (d, raw), hit in zip(man_items, present[n_chunks:])
+            if not hit)
+        if items:
+            store.backend.put_many(items)
+        n_written = len(missing)
+        store.stats.puts += n_written
+        store.stats.chunks_written += n_written
+        store.stats.bytes_stored += sum(len(enc) for enc in encoded)
+        dups = self._chunk_stages - n_written
+        store.stats.chunks_deduped += dups
+        store.stats.dedup_hits += dups
+        store._pending_release(self._chunks, self._manifests)
+        self._chunks = OrderedDict()
+        self._manifests = OrderedDict()
+        self._chunk_stages = 0
+        self._staged_bytes = 0
+
+    def _flush(self) -> None:
+        store = self.store
+        # 1. Data blobs land first — meta must never name missing content.
+        self._flush_blobs()
+        # 2. Write-once + non-ref mutable keys: ONE grouped unconditional
+        #    put (same lost-update semantics those keys have unbatched).
+        if self._staged:
+            store.stats.meta_requests += 1
+            store.backend.put_many(
+                [(store.META + n, raw) for n, raw in self._staged.items()])
+        # 3. Mutable refs flush LAST through the CAS guard.
+        unknown = [n for n in self._staged_refs
+                   if self._expected.get(n, _UNOBSERVED) is _UNOBSERVED]
+        if unknown:
+            store.stats.meta_requests += 1
+            for name, raw in zip(unknown, store.backend.get_many(
+                    [store.META + n for n in unknown])):
+                self._expected[name] = raw
+        for name, data in self._staged_refs.items():
+            self._cas_put(name, self._expected[name], data)
+
+    def _cas_put(self, name: str, expected, data: bytes) -> None:
+        store = self.store
+        key = store.META + name
+        for _ in range(self._CAS_MAX_RETRIES + 1):
+            store.stats.meta_requests += 1
+            if store.backend.put_if(key, expected, data):
+                return
+            store.stats.meta_requests += 1
+            current = store.backend.get_many([key])[0]
+            if current == data:
+                # Already landed — our own replayed put_if whose first
+                # response was lost, or an identical concurrent write.
+                return
+            store.stats.ref_cas_retries += 1
+            expected = current      # last-writer-wins, now with a re-read
+        raise RuntimeError(
+            f"ref {name!r}: compare-and-swap did not converge after "
+            f"{self._CAS_MAX_RETRIES} retries")
+
+    def _discard(self) -> None:
+        self.store._pending_release(self._chunks, self._manifests)
+        self._chunks.clear()
+        self._manifests.clear()
+        self._chunk_stages = 0
+        self._staged_bytes = 0
+        self._staged.clear()
+        self._staged_refs.clear()
+        self._cache.clear()
+        self._expected.clear()

@@ -388,6 +388,8 @@ class VersionStore:
     _PAGE_CACHE_CAP = 128
     _DIR_CACHE_CAP = 16
     _INDEX_CACHE_CAP = 8
+    _COMMIT_CACHE_CAP = 256
+    _PAGEIDX_MEMO_CAP = 4096
     # Pages are rewritten on touch and split once they exceed twice the
     # target; a touched page that shrinks below half the target merges
     # with a neighbor (the mirror rule), so steady-state pages hold
@@ -411,6 +413,15 @@ class VersionStore:
             OrderedDict()
         self._index_cache: "OrderedDict[str, Optional[object]]" = \
             OrderedDict()
+        # Commit bodies are content-addressed and Commit objects are
+        # treated as immutable by every caller, so they cache safely —
+        # this is what keeps the warm commit path's only uncached read
+        # (the base commit body) off the backend.
+        self._commit_cache: "OrderedDict[str, Commit]" = OrderedDict()
+        # page digest -> its attribute-index blob digest, remembered once
+        # this process built or validated it (content-addressed: a page's
+        # index can never go stale, so the memo only bounds memory).
+        self._pageidx_memo: "OrderedDict[str, str]" = OrderedDict()
 
     # -- cache plumbing ------------------------------------------------------
 
@@ -586,15 +597,37 @@ class VersionStore:
         rebuild.
         """
         keys = [self._page_index_meta_key(p.digest) for p in pages]
-        ptrs = self.store.get_metas(keys)
-        out: List[Optional[str]] = []
+        out: List[Optional[str]] = [None] * len(pages)
         build: List[int] = []
-        for i, ptr in enumerate(ptrs):
-            if ptr is not None and self.store.has_blob(ptr["blob"]):
-                out.append(ptr["blob"])
-            else:
-                out.append(None)
+        probe: List[int] = []
+        for i, p in enumerate(pages):
+            memo = self._cache_get(self._pageidx_memo, p.digest)
+            if memo is not None:
+                out[i] = memo
+            elif self.store.blob_is_staged(p.digest):
+                # A page written inside the open meta batch is new content;
+                # its index build is deterministic, so skip the pointer
+                # probe and rebuild — byte-identical either way.
                 build.append(i)
+            else:
+                probe.append(i)
+        if probe:
+            ptrs = self.store.get_metas([keys[i] for i in probe])
+            candidates = [(i, ptr) for i, ptr in zip(probe, ptrs)
+                          if ptr is not None]
+            alive = self.store.has_blobs(
+                [ptr["blob"] for _, ptr in candidates])
+            valid = {i: ptr["blob"] for (i, ptr), ok
+                     in zip(candidates, alive) if ok}
+            for i in probe:
+                blob = valid.get(i)
+                if blob is not None:
+                    out[i] = blob
+                    self._cache_put(self._pageidx_memo, pages[i].digest,
+                                    blob, self._PAGEIDX_MEMO_CAP)
+                else:
+                    build.append(i)
+            build.sort()
         # Build in bounded windows: grouped page prefetch (held locally —
         # a cold rebuild larger than the page LRU must not degrade to one
         # blob read per page), grouped index write, grouped pointer write.
@@ -623,6 +656,8 @@ class VersionStore:
                  for i, ref in zip(wbuild, refs)])
             for i, ref in zip(wbuild, refs):
                 out[i] = ref.digest
+                self._cache_put(self._pageidx_memo, pages[i].digest,
+                                ref.digest, self._PAGEIDX_MEMO_CAP)
         return out  # type: ignore[return-value]
 
     def ensure_attr_index(self, tree_digest: str,
@@ -635,7 +670,11 @@ class VersionStore:
         directory = self.get_page_directory(tree_digest)
         key = self._attr_index_meta_key(tree_digest)
         if directory is not None:
-            ptr = self.store.get_meta(key)
+            # A tree staged in the open meta batch is new content: its
+            # index is rebuilt deterministically (pages carried from the
+            # parent hit the memo), so the pointer probe is skipped.
+            ptr = None if self.store.blob_is_staged(tree_digest) \
+                else self.store.get_meta(key)
             if ptr is not None and self._paged_index_intact(ptr):
                 return
             page_idx = self._ensure_page_indexes(directory.pages)
@@ -669,7 +708,8 @@ class VersionStore:
             doc = self.store.get_json(ptr["blob"])
         except NotFoundError:
             return False
-        return all(self.store.has_blob(d) for d in doc.get("pages", []))
+        pages = doc.get("pages", [])
+        return all(self.store.has_blobs(pages)) if pages else True
 
     def _fetch_index_jsons(self, digests: List[str]) -> List[dict]:
         return self.store.get_jsons(digests)
@@ -692,8 +732,8 @@ class VersionStore:
                         or "pages" in doc:
                     # validate now, not at plan time: a swept per-page
                     # index blob must degrade checkout to a scan, never
-                    # crash it mid-iteration
-                    if all(self.store.has_blob(d) for d in doc["pages"]):
+                    # crash it mid-iteration (one grouped probe)
+                    if all(self.store.has_blobs(doc["pages"])):
                         idx = PagedAttributeIndex(self._fetch_index_jsons,
                                                   doc["pages"],
                                                   doc["counts"])
@@ -717,10 +757,14 @@ class VersionStore:
         meta: Optional[Mapping[str, object]] = None,
         timestamp: Optional[float] = None,
     ) -> Commit:
-        tree = self.put_manifest(manifest)
-        self.ensure_attr_index(tree, manifest)
-        return self._commit_tree(dataset, tree, parents, author, message,
-                                 meta, timestamp)
+        # One commit = one meta-batch scope: pages, indexes, the commit
+        # body and the commits index flush together (joins an enclosing
+        # scope when check_in already opened one).
+        with self.store.meta_batch(prefetch=[f"commits/{dataset}"]):
+            tree = self.put_manifest(manifest)
+            self.ensure_attr_index(tree, manifest)
+            return self._commit_tree(dataset, tree, parents, author,
+                                     message, meta, timestamp)
 
     def _commit_tree(
         self,
@@ -743,6 +787,8 @@ class VersionStore:
         }
         ref = self.store.put_json(body)
         commit = Commit.from_json(ref.digest, body)
+        self._cache_put(self._commit_cache, ref.digest, commit,
+                        self._COMMIT_CACHE_CAP)
         # Index commit ids per dataset for listing/GC roots.
         idx = self.store.get_meta(f"commits/{dataset}", default=[])
         if ref.digest not in idx:
@@ -777,28 +823,29 @@ class VersionStore:
         removes = set(removes)
         if any(rid in removes for rid in adds):
             adds = {rid: e for rid, e in adds.items() if rid not in removes}
-        base_tree = self.get_commit(base_commit_id).tree
-        directory = self.get_page_directory(base_tree)
-        if not self.page_size or directory is None:
-            # Legacy base (or legacy-writing store): materialize + rewrite.
-            manifest = self.get_manifest(base_tree).copy()
-            diff = self._delta_diff_from_map(
-                {e.record_id: e.blob.digest
-                 for e in manifest.iter_entries()}, adds, removes)
-            for entry in adds.values():
-                manifest.add(entry)
-            for rid in removes:
-                manifest.remove(rid)
-            commit = self.commit(dataset, manifest, parents, author,
-                                 message, meta, timestamp)
-            return commit, diff, len(manifest)
+        with self.store.meta_batch(prefetch=[f"commits/{dataset}"]):
+            base_tree = self.get_commit(base_commit_id).tree
+            directory = self.get_page_directory(base_tree)
+            if not self.page_size or directory is None:
+                # Legacy base (or legacy-writing store): materialize+rewrite.
+                manifest = self.get_manifest(base_tree).copy()
+                diff = self._delta_diff_from_map(
+                    {e.record_id: e.blob.digest
+                     for e in manifest.iter_entries()}, adds, removes)
+                for entry in adds.values():
+                    manifest.add(entry)
+                for rid in removes:
+                    manifest.remove(rid)
+                commit = self.commit(dataset, manifest, parents, author,
+                                     message, meta, timestamp)
+                return commit, diff, len(manifest)
 
-        new_dir, diff = self._apply_delta(directory, adds, removes)
-        tree = self._put_directory(new_dir)
-        self.ensure_attr_index(tree)
-        commit = self._commit_tree(dataset, tree, parents, author, message,
-                                   meta, timestamp)
-        return commit, diff, new_dir.n
+            new_dir, diff = self._apply_delta(directory, adds, removes)
+            tree = self._put_directory(new_dir)
+            self.ensure_attr_index(tree)
+            commit = self._commit_tree(dataset, tree, parents, author,
+                                       message, meta, timestamp)
+            return commit, diff, new_dir.n
 
     @staticmethod
     def _delta_diff_from_map(base_digests: Mapping[str, str],
@@ -934,7 +981,13 @@ class VersionStore:
         return [next(written) if isinstance(p, list) else p for p in parts]
 
     def get_commit(self, commit_id: str) -> Commit:
-        return Commit.from_json(commit_id, self.store.get_json(commit_id))
+        hit = self._cache_get(self._commit_cache, commit_id)
+        if hit is not None:
+            return hit
+        commit = Commit.from_json(commit_id, self.store.get_json(commit_id))
+        self._cache_put(self._commit_cache, commit_id, commit,
+                        self._COMMIT_CACHE_CAP)
+        return commit
 
     def list_commits(self, dataset: str) -> List[str]:
         return list(self.store.get_meta(f"commits/{dataset}", default=[]))
@@ -972,11 +1025,13 @@ class VersionStore:
         return [k[len(prefix):] for k in self.store.list_meta(prefix)]
 
     def resolve(self, dataset: str, rev: str) -> str:
-        """Resolve branch / tag / commit-id to a commit id."""
-        for getter in (self.get_branch, self.get_tag):
-            found = getter(dataset, rev)
-            if found:
-                return found
+        """Resolve branch / tag / commit-id to a commit id (branch and tag
+        probed in ONE grouped meta read)."""
+        head, tag = self.store.get_metas(
+            [f"refs/{dataset}/heads/{rev}", f"refs/{dataset}/tags/{rev}"])
+        found = head or tag
+        if found:
+            return found
         try:
             self.get_commit(rev)
             return rev

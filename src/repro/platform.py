@@ -197,15 +197,38 @@ class Platform:
         """Storage-engine counters: the verified-once read cache plus the
         batched write path (``put_calls`` / ``chunks_written`` /
         ``chunks_deduped`` / ``exists_probes`` — a fully-deduplicated
-        re-check-in shows up as one probe and zero chunk writes) plus the
-        remote I/O counters (``remote_requests`` / ``retries`` /
-        ``hedges_issued`` / ``hedge_wins``) and both cache tiers."""
+        re-check-in shows up as one probe and zero chunk writes), the
+        meta-batching counters (``meta_requests`` / ``meta_batched`` /
+        ``ref_cas_retries`` — a commit-scoped batch collapses the meta
+        namespace into a handful of round trips), plus the remote I/O
+        counters (``remote_requests`` / ``retries`` / ``hedges_issued`` /
+        ``hedge_wins``) and both cache tiers."""
         from dataclasses import asdict
 
         out = asdict(self.store.stats)
         out["cache"] = self.store.cache_info()
         out["disk_cache"] = self.store.disk_cache_info()
         return out
+
+    # ------------------------------------------------------------------ lifecycle
+
+    def close(self) -> None:
+        """Flush buffered state (audit events, lineage deltas) to the store.
+
+        Safe to call repeatedly; a platform left unclosed loses at most the
+        events buffered since the last commit boundary (every check_in also
+        flushes).  Both flushes ride one meta batch."""
+        with self.store.meta_batch(prefetch=[
+                self.acl.pending_seg_key(),
+                self.lineage.pending_seg_key()]):
+            self.acl.flush_audit()
+            self.lineage.flush()
+
+    def __enter__(self) -> "Platform":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ workflows
 

@@ -134,6 +134,24 @@ class RemoteBackend(StorageBackend):
     def list_keys(self, prefix: str = "") -> Iterator[str]:
         return iter(self.scheduler.call(self._req_list, prefix))
 
+    def put_if(self, key: str, expected: Optional[bytes],
+               data: bytes) -> bool:
+        # Native conditional write when the transport has one (a subclass
+        # defines ``_raw_put_if``: one physical request, e.g. HTTP
+        # If-Match); otherwise the base-class get-compare-put fallback.
+        # Retries replay the conditional atomically either way — a lost
+        # response makes the retry return False, which the store's CAS
+        # loop resolves by re-reading and seeing its own value landed.
+        raw = getattr(self, "_raw_put_if", None)
+        if raw is None:
+            return super().put_if(key, expected, data)
+
+        def req(_item) -> bool:
+            self._bump("remote_requests")
+            return raw(key, expected, data)
+
+        return self.scheduler.call(req, None)
+
     # -- grouped capabilities: pipelined, hedged, retried -------------------
 
     def exists_many(self, keys: Sequence[str]) -> List[bool]:

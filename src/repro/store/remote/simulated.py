@@ -154,6 +154,15 @@ class SimulatedRemoteBackend(RemoteBackend):
     def _raw_list_keys(self, prefix: str = "") -> List[str]:
         return self._simulate(lambda: list(self.inner.list_keys(prefix)))
 
+    def _raw_put_if(self, key: str, expected: Optional[bytes],
+                    data: bytes) -> bool:
+        # Native conditional write: compare-and-swap runs inside the inner
+        # backend (one physical request), so a "response lost" fault
+        # leaves the swap applied — exactly the replay case the store's
+        # CAS loop must absorb.
+        return self._simulate(lambda: self.inner.put_if(key, expected, data),
+                              send_bytes=len(data))
+
     # -- naive-mode degradation --------------------------------------------
 
     def exists_many(self, keys: Sequence[str]) -> List[bool]:

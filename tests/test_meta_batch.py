@@ -1,0 +1,420 @@
+"""Commit-scoped metadata batching: scope semantics, CAS refs, RTT
+budgets, fault-equivalence, and the segmented audit log.
+
+The batch is a pure grouping layer — every test here pins one of its
+contracts: staged state is invisible outside the scope but readable
+inside it; flush order is blobs → write-once meta → CAS'd refs; the
+final backend state is byte-identical to the unbatched path (even under
+injected transient faults); and a warm remote commit costs a handful of
+meta round trips instead of one per key.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import pytest
+
+from repro.core.acl import AccessController
+from repro.core.dataset import DatasetManager, Record
+from repro.core.store import MemoryBackend, MetaBatch, ObjectStore
+from repro.core.transforms import Pipeline, component
+from repro.platform import Platform
+from repro.store.remote import SimulatedRemoteBackend
+
+
+def seed_records(n=20, salt=""):
+    return [Record(f"r{i:02d}", f"payload {salt}{i}".encode() * 8,
+                   {"i": i, "lang": "en" if i % 3 else "fr"})
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------- scope semantics
+
+
+def test_batch_read_your_writes_and_durability():
+    be = MemoryBackend()
+    st = ObjectStore(be)
+    with st.meta_batch():
+        st.put_meta("cfg/a", {"x": 1})
+        assert st.get_meta("cfg/a") == {"x": 1}          # staged read
+        ref = st.put_blob(b"hello batch")
+        assert st.get_blob(ref.digest) == b"hello batch"  # staged blob read
+        # nothing durable yet: the scope owns the writes
+        assert not be.exists("meta/cfg/a")
+    # after exit everything landed
+    assert st.get_meta("cfg/a") == {"x": 1}
+    assert st.get_blob(ref.digest) == b"hello batch"
+    assert st.stats.meta_batched >= 1
+
+
+def test_batch_discards_on_exception():
+    st = ObjectStore(MemoryBackend())
+    with pytest.raises(RuntimeError):
+        with st.meta_batch():
+            st.put_meta("cfg/doomed", {"x": 1})
+            raise RuntimeError("abort the commit")
+    assert st.get_meta("cfg/doomed") is None
+
+
+def test_nested_scopes_join_the_outer():
+    st = ObjectStore(MemoryBackend())
+    with st.meta_batch():
+        with st.meta_batch():
+            st.put_meta("inner", 1)
+        # inner exit must NOT have flushed — the outer scope owns it
+        st2 = ObjectStore(st.backend)
+        assert st2.get_meta("inner") is None
+        assert st.get_meta("inner") == 1
+    assert ObjectStore(st.backend).get_meta("inner") == 1
+
+
+def test_list_meta_merges_staged_names_sorted():
+    st = ObjectStore(MemoryBackend())
+    st.put_meta("seg/b", 1)
+    with st.meta_batch():
+        st.put_meta("seg/a", 2)
+        st.put_meta("seg/c", 3)
+        assert st.list_meta("seg/") == ["seg/a", "seg/b", "seg/c"]
+
+
+def test_delete_meta_is_write_through_in_scope():
+    st = ObjectStore(MemoryBackend())
+    st.put_meta("gone", {"v": 1})
+    with st.meta_batch():
+        st.put_meta("gone", {"v": 2})   # staged...
+        st.delete_meta("gone")          # ...then deleted: forget the stage
+        assert st.get_meta("gone") is None
+    assert st.get_meta("gone") is None
+
+
+def test_spill_flushes_blobs_early_keeps_meta_staged(monkeypatch):
+    monkeypatch.setattr(MetaBatch, "_SPILL_BYTES", 1)
+    be = MemoryBackend()
+    st = ObjectStore(be)
+    with st.meta_batch():
+        st.put_meta("cfg/late", {"ok": True})
+        ref = st.put_blob(b"spilled payload" * 10)
+        # blob landed early (readable through a second store over the
+        # same backend), meta still staged
+        other = ObjectStore(be)
+        assert other.get_blob(ref.digest) == b"spilled payload" * 10
+        assert other.get_meta("cfg/late") is None
+    assert ObjectStore(be).get_meta("cfg/late") == {"ok": True}
+
+
+def test_disabled_batching_is_write_through():
+    st = ObjectStore(MemoryBackend(), meta_batching=False)
+    with st.meta_batch():
+        st.put_meta("now", 1)
+        assert ObjectStore(st.backend).get_meta("now") == 1
+    assert st.stats.meta_batched == 0
+
+
+# ---------------------------------------------------------------- CAS refs
+
+
+def test_put_meta_if_basic_semantics():
+    st = ObjectStore(MemoryBackend())
+    assert st.put_meta_if("refs/d/heads/main", None, "c1") is True
+    assert st.get_meta("refs/d/heads/main") == "c1"
+    # stale expectation -> clean conflict, no write
+    assert st.put_meta_if("refs/d/heads/main", "c0", "c2") is False
+    assert st.get_meta("refs/d/heads/main") == "c1"
+    assert st.put_meta_if("refs/d/heads/main", "c1", "c2") is True
+    assert st.get_meta("refs/d/heads/main") == "c2"
+
+
+def test_batched_ref_flush_retries_on_interleaved_writer():
+    be = MemoryBackend()
+    a, b = ObjectStore(be), ObjectStore(be)
+    with a.meta_batch():
+        assert a.get_meta("refs/d/heads/main") is None  # observe pre-image
+        a.put_meta("refs/d/heads/main", "from-a")
+        # another writer lands first: the batch's expectation goes stale
+        b.put_meta("refs/d/heads/main", "from-b")
+    # flush saw the conflict, re-read, and retried: last writer wins,
+    # with the retry counted
+    assert a.stats.ref_cas_retries == 1
+    assert b.get_meta("refs/d/heads/main") == "from-a"
+
+
+def test_cas_replay_detected_after_lost_response():
+    class LyingBackend(MemoryBackend):
+        """Applies the swap, then reports failure once — the 'response
+        lost' shape a retried remote conditional write produces."""
+
+        def __init__(self):
+            super().__init__()
+            self.lies_left = 1
+
+        def put_if(self, key, expected, data):
+            ok = super().put_if(key, expected, data)
+            if ok and self.lies_left:
+                self.lies_left -= 1
+                return False
+            return ok
+
+    st = ObjectStore(LyingBackend())
+    with st.meta_batch():
+        st.put_meta("refs/d/heads/main", "landed")
+    # the re-read found our own bytes: replay success, not a conflict
+    assert st.stats.ref_cas_retries == 0
+    assert st.get_meta("refs/d/heads/main") == "landed"
+
+
+def test_two_platform_writers_one_wins_one_retries():
+    be = MemoryBackend()
+    p1 = Platform.open(ObjectStore(be), actor="a")
+    p2 = Platform.open(ObjectStore(be), actor="b")
+    p1.dataset("d").check_in(seed_records(4), message="from p1")
+    p2.dataset("d").check_in(seed_records(4, salt="x"), message="from p2")
+    # both commits exist; the second platform saw the first head move
+    # mid-commit only if construction raced — here they serialize, so at
+    # minimum both heads resolved cleanly and no CAS loop exhausted.
+    assert p1.versions.resolve("d", "main") != ""
+    assert p2.versions.resolve("d", "main") != ""
+
+
+# ---------------------------------------------------------------- RTT budgets
+
+
+def _remote_platform(batching=True, rtt=0.0, **sim):
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=rtt, **sim)
+    st = ObjectStore(be, meta_batching=batching)
+    return Platform.open(st, actor="bench"), st
+
+
+def test_warm_checkin_meta_request_budget():
+    plat, st = _remote_platform()
+    ds = plat.dataset("d")
+    ds.check_in(seed_records(40), message="seed")
+    m0, r0 = st.stats.meta_requests, st.stats.remote_requests
+    ds.check_in([Record("r05", b"edited" * 10, {"i": 5, "lang": "en"}),
+                 Record("r99", b"brand new" * 10, {"i": 99, "lang": "de"})],
+                message="delta")
+    meta = st.stats.meta_requests - m0
+    remote = st.stats.remote_requests - r0
+    # the acceptance ceiling: a warm commit costs a handful of meta round
+    # trips (prefetch, flush put_many, ref CAS) — not one per key
+    assert meta <= 8, f"warm check_in took {meta} meta round trips"
+    assert remote <= 35, f"warm check_in took {remote} physical requests"
+
+
+def test_warm_checkout_request_budget():
+    plat, st = _remote_platform()
+    ds = plat.dataset("d")
+    ds.check_in(seed_records(40), message="seed")
+    ds.checkout()  # warm lineage/caches
+    m0, r0 = st.stats.meta_requests, st.stats.remote_requests
+    snap = ds.checkout()
+    assert len(snap.record_ids()) == 40
+    assert st.stats.meta_requests - m0 <= 4
+    assert st.stats.remote_requests - r0 <= 8
+
+
+def test_cached_derive_request_budget():
+    plat, st = _remote_platform()
+    ds = plat.dataset("d")
+    ds.check_in(seed_records(24), message="seed")
+
+    @component(kind="map", name="upper")
+    def upper(rec):
+        return Record(rec.record_id, rec.data.upper(), dict(rec.attrs))
+
+    pipe = Pipeline([upper], name="up")
+    ds.derive(pipe, output="d-up")
+    m0, r0 = st.stats.meta_requests, st.stats.remote_requests
+    res = ds.derive(pipe, output="d-up")
+    assert res.cache_hit
+    assert st.stats.meta_requests - m0 <= 4
+    assert st.stats.remote_requests - r0 <= 8
+
+
+def test_batching_reduces_meta_round_trips():
+    counts = {}
+    for batching in (True, False):
+        plat, st = _remote_platform(batching=batching)
+        ds = plat.dataset("d")
+        ds.check_in(seed_records(40), message="seed")
+        m0 = st.stats.meta_requests
+        ds.check_in([Record("r05", b"edited" * 10, {"i": 5, "lang": "en"})],
+                    message="delta")
+        counts[batching] = st.stats.meta_requests - m0
+    assert counts[True] * 3 <= counts[False], counts
+
+
+# ---------------------------------------------------------------- fault equivalence
+
+
+@pytest.mark.parametrize("fault_mode", ["before", "after"])
+def test_batched_state_byte_identical_under_faults(fault_mode, monkeypatch):
+    # Constant clock: timestamps land in commit bodies / audit events /
+    # lineage edges, and the two modes take different numbers of calls.
+    monkeypatch.setattr(time, "time", lambda: 1700000000.0)
+
+    def run(batching):
+        inner = MemoryBackend()
+        be = SimulatedRemoteBackend(inner, rtt=0.0, fault_every=5,
+                                    fault_mode=fault_mode)
+        st = ObjectStore(be, meta_batching=batching)
+        plat = Platform.open(st, actor="alice")
+        ds = plat.dataset("d")
+        ds.check_in(seed_records(16), message="seed")
+        ds.check_in([Record("r03", b"edited", {"i": 3, "lang": "en"}),
+                     Record("r90", b"new", {"i": 90, "lang": "de"})],
+                    message="delta")
+        plat.manager.tag_dataset("d", "golden", "alice")
+        plat.manager.delete_records("d", ["r04"], "alice")
+        plat.close()
+        return dict(inner._data)
+
+    batched, unbatched = run(True), run(False)
+    assert set(batched) == set(unbatched)
+    diff = [k for k in batched if batched[k] != unbatched[k]]
+    assert diff == [], f"diverging keys: {diff[:10]}"
+
+
+def test_batched_flush_failure_surfaces_and_discards():
+    class FailingBackend(MemoryBackend):
+        def __init__(self):
+            super().__init__()
+            self.fail_puts = False
+
+        def put(self, key, data):
+            if self.fail_puts and key.startswith("meta/"):
+                raise ConnectionError("backend down")
+            super().put(key, data)
+
+        def put_many(self, items):
+            for k, d in items:
+                self.put(k, d)
+
+    be = FailingBackend()
+    st = ObjectStore(be)
+    with pytest.raises(ConnectionError):
+        with st.meta_batch():
+            st.put_meta("cfg/a", 1)
+            be.fail_puts = True
+    be.fail_puts = False
+    # the failed flush did not half-apply staged meta invisibly: the key
+    # never landed and later scopes start clean
+    assert st.get_meta("cfg/a") is None
+    with st.meta_batch():
+        st.put_meta("cfg/b", 2)
+    assert st.get_meta("cfg/b") == 2
+
+
+# ---------------------------------------------------------------- audit segments
+
+
+def _audited_acl(store):
+    acl = AccessController(store, open_world=True)
+    return acl
+
+
+def test_audit_flush_writes_one_segment_per_flush():
+    st = ObjectStore(MemoryBackend())
+    acl = _audited_acl(st)
+    for i in range(3):
+        acl.check("alice", "READ", "d", note=f"n{i}")
+    acl.flush_audit()
+    segs = st.list_meta("audit/seg/")
+    assert segs == ["audit/seg/00000000"]
+    assert len(st.get_meta(segs[0])) == 3
+    acl.check("bob", "WRITE", "d")
+    acl.flush_audit()
+    assert st.list_meta("audit/seg/") == ["audit/seg/00000000",
+                                          "audit/seg/00000001"]
+    log = acl.audit_log()
+    assert [e["actor"] for e in log] == ["alice", "alice", "alice", "bob"]
+
+
+def test_audit_reads_legacy_base_list():
+    st = ObjectStore(MemoryBackend())
+    legacy = [{"ts": 1.0, "actor": "old", "action": "READ", "dataset": "d",
+               "allowed": True, "note": ""}]
+    st.put_meta("acl/audit", legacy)
+    acl = _audited_acl(st)
+    acl.check("new", "READ", "d")
+    log = acl.audit_log()
+    assert [e["actor"] for e in log] == ["old", "new"]
+
+
+def test_audit_segments_compact_into_base():
+    st = ObjectStore(MemoryBackend())
+    acl = _audited_acl(st)
+    for i in range(AccessController._COMPACT_AT):
+        acl.check("alice", "READ", "d", note=f"n{i}")
+        acl.flush_audit()
+    assert len(st.list_meta("audit/seg/")) == AccessController._COMPACT_AT
+    log = acl.audit_log()  # reading is when compaction folds segments
+    assert len(log) == AccessController._COMPACT_AT
+    assert st.list_meta("audit/seg/") == []
+    assert len(st.get_meta("acl/audit")) == AccessController._COMPACT_AT
+    assert acl._next_audit_seg == 0
+    # post-compaction appends start a fresh segment sequence
+    acl.check("bob", "WRITE", "d")
+    acl.flush_audit()
+    assert st.list_meta("audit/seg/") == ["audit/seg/00000000"]
+
+
+def test_concurrent_audit_appenders_do_not_overwrite():
+    st = ObjectStore(MemoryBackend())
+    a, b = _audited_acl(st), _audited_acl(st)
+    a.check("alice", "READ", "d")
+    b.check("bob", "READ", "d")
+    a.flush_audit()
+    b.flush_audit()  # probes forward past a's segment
+    names = st.list_meta("audit/seg/")
+    assert len(names) == 2
+    actors = {st.get_meta(n)[0]["actor"] for n in names}
+    assert actors == {"alice", "bob"}
+
+
+def test_checkin_flushes_buffered_audit_events():
+    be = MemoryBackend()
+    plat = Platform.open(ObjectStore(be), actor="alice")
+    plat.dataset("d").check_in(seed_records(4), message="seed")
+    # the decision that admitted the check_in is durable without close()
+    fresh = AccessController(ObjectStore(be))
+    log = fresh.audit_log()
+    assert any(e["actor"] == "alice" and e["allowed"] for e in log)
+
+
+def test_platform_close_flushes_audit_and_lineage():
+    be = MemoryBackend()
+    with Platform.open(ObjectStore(be), actor="alice") as plat:
+        plat.dataset("d").check_in(seed_records(4), message="seed")
+        plat.acl.check("mallory", "READ", "d", note="browse")
+    fresh = Platform.open(ObjectStore(be), actor="z")
+    assert any(e["actor"] == "mallory" for e in fresh.audit_log())
+    # lineage flushed too: the version node survives reopen
+    assert fresh.lineage.nodes(kind="dataset_version")
+
+
+# ---------------------------------------------------------------- surfacing
+
+
+def test_store_stats_surfaces_meta_counters():
+    plat, st = _remote_platform()
+    plat.dataset("d").check_in(seed_records(4), message="seed")
+    out = plat.store_stats()
+    assert out["meta_requests"] > 0
+    assert out["meta_batched"] > 0
+    assert out["ref_cas_retries"] == 0
+
+
+def test_cli_store_stats_has_meta_counters(tmp_path, capsys):
+    from repro.cli import main
+
+    repo = str(tmp_path / "repo")
+    f = tmp_path / "a.txt"
+    f.write_bytes(b"hello meta batch")
+    assert main(["--repo", repo, "check-in", "ds", str(f), "-m", "v1"]) == 0
+    capsys.readouterr()
+    assert main(["--repo", repo, "store", "stats"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    for key in ("meta_requests", "meta_batched", "ref_cas_retries"):
+        assert key in out
