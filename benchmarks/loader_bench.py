@@ -108,6 +108,40 @@ def run(smoke: bool = False,
         metrics["loader_batches_per_sec"] = fast_bps
         metrics["loader_records"] = n_steady
         metrics["store_cache_hits"] = int(cache_hits)
+
+    # --- page-window streaming vs global permutation: cold time-to-batches --
+    # The page-window contract is about the *cold start* on a many-page
+    # snapshot: global mode must materialize every manifest entry and hash
+    # the whole id list before batch 0; page_window answers from directory
+    # metadata and touches only the first window's pages.
+    n_pw, page, seq = (8192, 64, 128) if smoke else (32768, 64, 128)
+    pplat = Platform.open(actor="b", page_size=page)
+    pplat.dataset("pw").check_in(_packed_docs(n_pw, seq, seed=1))
+    K = 4
+
+    def _cold_first_batches(**kw):
+        plan = pplat.dataset("pw").plan()   # fresh plan: nothing cached
+        t0 = time.perf_counter()
+        ld = ShardedSnapshotLoader(plan, 8, seq, **kw)
+        for _ in range(K):
+            ld.next_batch()
+        return time.perf_counter() - t0, ld
+
+    # page_window runs FIRST, so any CAS-cache warmth it leaves behind
+    # favors the global baseline (the measured speedup is conservative).
+    pw_dt, pw_ld = _cold_first_batches(shuffle="page_window", window_pages=8)
+    gl_dt, _ = _cold_first_batches(shuffle="global")
+    pw_speedup = gl_dt / pw_dt
+    pw_stats = pw_ld.stats()
+    rows.append(("loader_page_window_vs_global", pw_dt / K * 1e6,
+                 f"{pw_speedup:.1f}x vs global cold start, {n_pw} records, "
+                 f"{n_pw // page} pages, peak_resident="
+                 f"{int(pw_stats['peak_resident_ids'])}"))
+    if metrics is not None:
+        metrics["loader_page_window_speedup"] = pw_speedup
+        metrics["loader_page_window_records"] = n_pw
+        metrics["loader_page_window_peak_resident"] = int(
+            pw_stats["peak_resident_ids"])
     return rows
 
 

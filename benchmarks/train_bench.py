@@ -3,21 +3,36 @@
 Gives CPU-host wall times for the jitted train/decode steps of each family
 representative (production timings are TPU; these catch regressions and
 show the step functions are real and jittable end-to-end).
+
+``run_e2e`` additionally times the whole data plane: platform check-in ->
+page-window streaming loader -> double-buffered :class:`DeviceFeed` ->
+jitted train step, reporting ``train_tokens_per_s`` and the loader's
+``loader_wait_fraction`` (share of consumer wall time blocked on host
+work — the zero-stall contract ``scripts/check_bench_json.py`` enforces).
 """
 
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.data import DeviceFeed, ShardedSnapshotLoader
 from repro.models import RuntimeConfig, build_model
+from repro.platform import Platform
 from repro.train import TrainConfig, make_train_step
 from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+try:  # package context (python -m benchmarks.run) vs direct script
+    from . import bench_io
+    from .loader_bench import _packed_docs
+except ImportError:  # pragma: no cover
+    import bench_io
+    from loader_bench import _packed_docs
 
 FAMS = ["qwen2.5-32b", "mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-9b",
         "seamless-m4t-medium"]
@@ -57,3 +72,87 @@ def run() -> List[Tuple[str, float, str]]:
         rows.append((f"train_step_smoke_{arch}", us,
                      f"{B * S / (us / 1e6):.0f}tok/s"))
     return rows
+
+
+def run_e2e(smoke: bool = False,
+            metrics: Optional[Dict[str, object]] = None,
+            ) -> List[Tuple[str, float, str]]:
+    """check_in -> page-window loader -> DeviceFeed -> train_step."""
+    rows: List[Tuple[str, float, str]] = []
+    B, S = 8, 64
+    n_rec, page = (512, 64) if smoke else (2048, 64)
+    n_steps = 8 if smoke else 32
+
+    plat = Platform.open(actor="bench", page_size=page)
+    plat.dataset("feed").check_in(_packed_docs(n_rec, S, seed=2))
+    loader = ShardedSnapshotLoader(
+        plat.dataset("feed").plan(), B, S,
+        shuffle="page_window", window_pages=4)
+
+    cfg = get_smoke_config("mamba2-1.3b")
+    rt = RuntimeConfig(compute_dtype=jnp.float32, attn_impl="naive",
+                       ssd_impl="xla", rglru_impl="xla")
+    model = build_model(cfg, rt)
+    tc = TrainConfig(optimizer=OptimizerConfig(lr=1e-3))
+    opt = make_optimizer(tc.optimizer)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+
+    feed_it = iter(DeviceFeed(loader, depth=2))
+    try:
+        batch, _ = next(feed_it)  # compile outside the timed region
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            batch, _ = next(feed_it)
+            params, opt_state, m = step_fn(params, opt_state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+    finally:
+        feed_it.close()
+
+    toks_per_s = n_steps * B * S / dt
+    s = loader.stats()
+    wait_us_per_batch = (s["wait_time_s"] / s["batches"] * 1e6
+                         if s["batches"] else 0.0)
+    rows.append(("train_tokens_per_s", dt / n_steps * 1e6,
+                 f"{toks_per_s / 1e3:.1f}ktok/s end-to-end, "
+                 f"{n_rec} records, mode={s['mode']}"))
+    rows.append(("loader_wait_fraction", wait_us_per_batch,
+                 f"wait_fraction={s['wait_fraction']:.3f}, "
+                 f"pages_streamed={int(s['pages_streamed'])}, "
+                 f"peak_resident={int(s['peak_resident_ids'])}"))
+    if metrics is not None:
+        metrics["train_tokens_per_s"] = toks_per_s
+        metrics["loader_wait_fraction"] = float(s["wait_fraction"])
+        metrics["train_feed_mode"] = s["mode"]
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (e2e feed bench only — the "
+                         "per-family step sweep is skipped)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge rows into a BENCH_platform.json document")
+    args = ap.parse_args(argv)
+    metrics: Dict[str, object] = {}
+    rows = run_e2e(smoke=args.smoke, metrics=metrics)
+    if not args.smoke:
+        rows += run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"train/{name},{us:.1f},{derived}")
+    if args.json:
+        bench_io.write_section(args.json, "train", rows, metrics,
+                               smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

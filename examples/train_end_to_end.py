@@ -49,6 +49,12 @@ def main():
         argv += ["--kill-at", str(args.kill_at)]
     out = train_mod.main(argv)
     assert out["improved"], "loss did not improve"
+    stats = out["loader_stats"]
+    print(f"loader stats: mode={stats['mode']} "
+          f"wait_fraction={stats['wait_fraction']:.3f} "
+          f"batches={int(stats['batches'])} "
+          f"pages_streamed={int(stats['pages_streamed'])} "
+          f"peak_resident_ids={int(stats['peak_resident_ids'])}")
     print("OK: end-to-end training improved the loss and checkpointed "
           "through the platform")
 

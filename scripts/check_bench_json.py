@@ -36,6 +36,11 @@ REQUIRED_ROWS = {
     "loader": (
         "loader_steady_state_legacy",
         "loader_steady_state",
+        "loader_page_window_vs_global",
+    ),
+    "train": (
+        "train_tokens_per_s",
+        "loader_wait_fraction",
     ),
 }
 REQUIRED_METRICS = {
@@ -46,7 +51,8 @@ REQUIRED_METRICS = {
                  "remote_checkout_speedup", "remote_vs_local_ratio",
                  "remote_hedge_wins", "remote_checkin_e2e_speedup",
                  "remote_checkin_meta_requests"),
-    "loader": ("loader_steady_state_speedup",),
+    "loader": ("loader_steady_state_speedup", "loader_page_window_speedup"),
+    "train": ("train_tokens_per_s", "loader_wait_fraction"),
 }
 # Speedup contracts: metric -> (non-smoke floor, smoke floor).  The
 # committed trajectory must show cached ≫ cold, incremental ≫ cold, paged
@@ -72,6 +78,12 @@ RATIO_FLOORS = {
         # baseline, one round trip per meta key).
         "remote_checkin_e2e_speedup": (5.0, 2.0),
     },
+    "loader": {
+        # Page-window streaming vs the global permutation on a cold
+        # many-page snapshot: time-to-first-batches must stay well ahead
+        # of materializing + hashing the whole manifest.
+        "loader_page_window_speedup": (5.0, 3.0),
+    },
 }
 # Ceiling contracts: metric -> (non-smoke ceiling, smoke ceiling) — for
 # metrics where SMALLER is better.  The grouped remote data path at 50 ms
@@ -85,6 +97,11 @@ RATIO_CEILINGS = {
         # warm batched commit may spend at most a handful of meta round
         # trips — prefetch + flush put_many + ref CAS leaves headroom.
         "remote_checkin_meta_requests": (8.0, 8.0),
+    },
+    "train": {
+        # Zero-stall contract: share of consumer wall time the train loop
+        # spent blocked on host work.  Smoke CI machines get headroom.
+        "loader_wait_fraction": (0.5, 0.9),
     },
 }
 

@@ -21,6 +21,9 @@ PYTHONPATH=src python benchmarks/platform_bench.py --smoke --json "$SMOKE_JSON"
 echo "== loader bench (smoke) =="
 PYTHONPATH=src python benchmarks/loader_bench.py --smoke --json "$SMOKE_JSON"
 
+echo "== train bench (smoke) =="
+PYTHONPATH=src python benchmarks/train_bench.py --smoke --json "$SMOKE_JSON"
+
 echo "== bench contract =="
 # the smoke run just produced one document; the committed repo-root file
 # (non-smoke trajectory) must exist and satisfy the same contract —

@@ -99,8 +99,8 @@ def cmd_checkout(plat: Platform, args) -> int:
         snap = plan.snapshot()
     else:
         snap = plan.snapshot()
-        for rid in snap.record_ids():
-            print(rid, json.dumps(dict(snap.attrs(rid))))
+        for entry in snap.entries():   # stream: no separate id list + lookup
+            print(entry.record_id, json.dumps(dict(entry.attrs)))
     digest = plan.query_digest()
     print(f"snapshot {snap.snapshot_id} @ {snap.commit_id[:12]} "
           f"(query {digest[:12] if digest else 'opaque'})")

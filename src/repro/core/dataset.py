@@ -75,6 +75,16 @@ class Snapshot:
     def record_ids(self) -> List[str]:
         return [e.record_id for e in self._entries]
 
+    def count(self) -> int:
+        """Number of records (always cheap — see :meth:`CheckoutPlan.count`
+        for the streaming twin)."""
+        return len(self._entries)
+
+    def iter_record_ids(self) -> Iterator[str]:
+        """Stream record ids without building the full list."""
+        for e in self._entries:
+            yield e.record_id
+
     def entries(self) -> List[RecordEntry]:
         return list(self._entries)
 
@@ -88,6 +98,46 @@ class Snapshot:
         """Batched payload fetch (grouped CAS lookups, chunk dedup)."""
         return self._store.get_blobs(
             [self._by_id[r].blob for r in record_ids])
+
+    def read_entries(self, entries: Sequence[RecordEntry]) -> List[bytes]:
+        """Grouped payload fetch for already-resolved entries (no id
+        lookup — the loader's page-window path holds entries directly)."""
+        return self._store.get_blobs([e.blob for e in entries])
+
+    # -- page-granular feed surface (ShardedSnapshotLoader page-window mode)
+    #
+    # A materialized snapshot holds every entry anyway, so its "pages" are
+    # synthesized fixed-size slices — the surface exists for interface
+    # parity with CheckoutPlan, where pure paged plans serve real manifest
+    # pages without materializing anything.
+
+    FEED_PAGE_SIZE = 1024
+
+    def page_count(self) -> int:
+        n = len(self._entries)
+        return (n + self.FEED_PAGE_SIZE - 1) // self.FEED_PAGE_SIZE
+
+    def page_sizes(self) -> List[int]:
+        n, step = len(self._entries), self.FEED_PAGE_SIZE
+        return [min(step, n - off) for off in range(0, n, step)] or []
+
+    def page_record_ids(self, page_index: int) -> List[str]:
+        return [e.record_id for e in self.page_entries(page_index)]
+
+    def page_entries(self, page_index: int) -> List[RecordEntry]:
+        step = self.FEED_PAGE_SIZE
+        return self._entries[page_index * step:(page_index + 1) * step]
+
+    def read_pages(self, page_indices: Sequence[int]
+                   ) -> List[List[RecordEntry]]:
+        """Many pages' entries in one call (everything is resident here;
+        the CheckoutPlan twin batches the underlying CAS reads)."""
+        return [self.page_entries(pi) for pi in page_indices]
+
+    def pages_digest(self) -> str:
+        """Content identity for page feeds; a materialized snapshot just
+        reuses its exact content digest (everything is resident already)."""
+        return self.content_digest()
 
     def __iter__(self):
         for e in self._entries:
@@ -305,7 +355,38 @@ class CheckoutPlan:
     # -- Snapshot-compatible read surface (feeds the loader directly) ---------
 
     def record_ids(self) -> List[str]:
+        """Compatibility wrapper — materializes the full id list.
+
+        Streaming callers should prefer :meth:`iter_record_ids` /
+        :meth:`count`, which stay O(page) for pure paged plans."""
         return [e.record_id for e in self.entries()]
+
+    def count(self) -> int:
+        """Record count without materializing entries when possible.
+
+        A *pure* plan (no query/shard/limit) over a paged tree answers from
+        the page directory header — O(1), no page reads.  Filtered plans
+        fall back to the cached entry list."""
+        directory = self._pure_directory()
+        if directory is not None:
+            return directory.n
+        return len(self.entries())
+
+    def iter_record_ids(self) -> Iterator[str]:
+        """Stream record ids page-by-page; never builds the full list for
+        pure paged plans (O(window) resident, grouped CAS reads)."""
+        if self._entries is not None:
+            for e in self._entries:
+                yield e.record_id
+            return
+        directory = self._pure_directory()
+        if directory is None:
+            for e in self.iter_entries():
+                yield e.record_id
+            return
+        for raw in self._dm.versions.iter_page_records(directory):
+            for o in raw:
+                yield o["id"]
 
     def _entry(self, record_id: str) -> RecordEntry:
         self.entries()
@@ -323,11 +404,101 @@ class CheckoutPlan:
         return self._dm.store.get_blobs(
             [self._entry(r).blob for r in record_ids])
 
+    def read_entries(self, entries: Sequence[RecordEntry]) -> List[bytes]:
+        """Grouped payload fetch for already-resolved entries.
+
+        Unlike :meth:`read_batch` this never forces :meth:`entries` — the
+        loader's page-window mode resolves entries page-by-page and reads
+        payloads here, so a feed stays O(window) resident end to end."""
+        return self._dm.store.get_blobs([e.blob for e in entries])
+
     def content_digest(self) -> str:
         h = hashlib.sha256()
         for e in self.entries():  # cached — the loader calls this + ids
             h.update(e.record_id.encode())
             h.update(e.blob.digest.encode())
+        return h.hexdigest()
+
+    # -- page-granular feed surface (ShardedSnapshotLoader page-window mode) --
+    #
+    # Pure plans (no query/shard/limit) over paged trees serve the commit's
+    # real manifest pages: page count / sizes come from the directory header
+    # (no page reads), per-page ids/entries read exactly one page blob, and
+    # payloads ride the grouped ``get_blobs`` machinery.  Anything else
+    # (filtered plans, legacy monolithic trees, materialized snapshots)
+    # degrades to fixed-size slices of the cached entry list — same
+    # interface, without the O(window) memory guarantee.
+
+    def _pure_directory(self):
+        """The commit's page directory iff this plan is a full-tree read
+        (TrueQuery, no shard, no limit) over a paged manifest; else None."""
+        if not isinstance(self.query, TrueQuery) or self.shard is not None \
+                or self.limit is not None:
+            return None
+        return self._dm.versions.get_page_directory(
+            self._dm.versions.get_commit(self.commit_id).tree)
+
+    def page_count(self) -> int:
+        directory = self._pure_directory()
+        if directory is not None:
+            return len(directory.pages)
+        n = len(self.entries())
+        step = Snapshot.FEED_PAGE_SIZE
+        return (n + step - 1) // step
+
+    def page_sizes(self) -> List[int]:
+        """Per-page record counts — directory metadata only (no page
+        reads), which is what lets the loader seek to any stream position
+        without touching data."""
+        directory = self._pure_directory()
+        if directory is not None:
+            return [p.n for p in directory.pages]
+        n, step = len(self.entries()), Snapshot.FEED_PAGE_SIZE
+        return [min(step, n - off) for off in range(0, n, step)] or []
+
+    def page_record_ids(self, page_index: int) -> List[str]:
+        directory = self._pure_directory()
+        if directory is not None:
+            return [o["id"] for o in self._dm.versions.get_page_records(
+                directory.pages[page_index].digest)]
+        return [e.record_id for e in self.page_entries(page_index)]
+
+    def page_entries(self, page_index: int) -> List[RecordEntry]:
+        """One page's entries — O(page) for pure paged plans."""
+        directory = self._pure_directory()
+        if directory is not None:
+            return [RecordEntry.from_raw(o)
+                    for o in self._dm.versions.get_page_records(
+                        directory.pages[page_index].digest)]
+        step = Snapshot.FEED_PAGE_SIZE
+        return self.entries()[page_index * step:(page_index + 1) * step]
+
+    def read_pages(self, page_indices: Sequence[int]
+                   ) -> List[List[RecordEntry]]:
+        """Many pages' entries per grouped CAS read — the loader's
+        page-window fill path (one ``get_jsons`` window per
+        ``_PAGE_FETCH_WINDOW`` pages instead of a round trip per page)."""
+        directory = self._pure_directory()
+        if directory is not None:
+            return [[RecordEntry.from_raw(o) for o in raw]
+                    for raw in self._dm.versions.iter_page_records(
+                        directory, list(page_indices))]
+        return [self.page_entries(pi) for pi in page_indices]
+
+    def pages_digest(self) -> str:
+        """Cheap content identity for page feeds.
+
+        For pure paged plans this hashes the page directory rows (page
+        blobs are content-addressed, so equal digests == equal content)
+        without reading a single page; otherwise it equals
+        :meth:`content_digest`."""
+        directory = self._pure_directory()
+        if directory is None:
+            return self.content_digest()
+        h = hashlib.sha256()
+        h.update(b"pages:")
+        for p in directory.pages:
+            h.update(p.digest.encode())
         return h.hexdigest()
 
     # -- materialization -------------------------------------------------------

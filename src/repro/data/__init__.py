@@ -1,10 +1,10 @@
 from .components import (ByteTokenizer, DedupComponent,
                          LengthFilterComponent, PackComponent,
                          SplitComponent, TokenizeComponent, decode_packed)
-from .loader import LoaderState, ShardedSnapshotLoader
+from .loader import DeviceFeed, LoaderState, ShardedSnapshotLoader
 
 __all__ = [
     "ByteTokenizer", "DedupComponent", "LengthFilterComponent",
     "PackComponent", "SplitComponent", "TokenizeComponent", "decode_packed",
-    "LoaderState", "ShardedSnapshotLoader",
+    "DeviceFeed", "LoaderState", "ShardedSnapshotLoader",
 ]

@@ -5,49 +5,78 @@ Feed it a materialized :class:`~repro.core.dataset.Snapshot` or — the
 preferred, allocation-free path — a lazy
 :class:`~repro.core.dataset.CheckoutPlan` straight from
 ``Platform.open(...).dataset(name).plan(where=...)``: the loader only needs
-the ``record_ids`` / ``read`` / ``content_digest`` read surface, which a
-plan streams from the manifest without materializing a snapshot or
-registering lineage for every restart.
+the Snapshot-like read surface, which a plan streams from the manifest
+without materializing a snapshot or registering lineage for every restart.
 
 This is the handoff between the paper's data plane and the TPU fleet:
 
-- **Deterministic order**: records are ordered by a seeded hash of
-  (record_id, epoch); every data shard slices the same global order, so a
-  global batch is a pure function of (snapshot digest, epoch, step) — the
-  property that makes checkpoint/restart exact (no skipped/duplicated data
-  after preemption).
+- **Deterministic order**: the batch stream is a pure function of
+  (snapshot digest, epoch, seed, step) — the property that makes
+  checkpoint/restart exact (no skipped/duplicated data after preemption).
+  Two shuffle modes share that contract:
+
+  * ``shuffle="global"`` — the legacy full permutation: every record id is
+    hashed with (seed, epoch) and the whole epoch is sorted at once.
+    Exact, but O(N) resident ids and an O(N log N) sort per epoch — the
+    measurable baseline, and the default for small snapshots.
+  * ``shuffle="page_window"`` — page-window streaming: the commit's
+    manifest *pages* are deterministically permuted per (epoch, seed),
+    consecutive permuted pages are grouped into windows of
+    ``window_pages`` pages, and records are shuffled (same seeded-hash
+    sort) *within* each window.  The full permutation is never
+    materialized: peak resident ids are O(window_pages · page_size)
+    regardless of snapshot size, and a window with ``window_pages >=
+    n_pages`` degenerates to exactly the global order.  Requires the
+    page-granular feed surface (``page_count`` / ``page_sizes`` /
+    ``page_entries`` / ``read_entries`` / ``pages_digest``), which
+    CheckoutPlan serves straight from the page directory for pure plans.
+
 - **Sharded**: shard ``i`` of ``n`` reads records where
   ``order_index % n == i`` — in a multi-host job each host feeds only its
   slice and ``jax.make_array_from_process_local_data`` assembles the global
   array; single-process here, we assemble directly with ``device_put``.
-- **Resumable**: ``state()`` is a tiny dict (snapshot digest, epoch, step)
-  stored inside checkpoints; ``restore()`` seeks exactly there.
-- **Straggler-tolerant**: a prefetch thread with a bounded queue rides over
-  slow CAS reads; a timeout surfaces stuck shards instead of hanging the
-  step loop.
+- **Resumable**: ``state()`` is a tiny dict (snapshot digest, shuffle mode,
+  epoch, step, window cursor) stored inside checkpoints; ``restore()``
+  seeks exactly there — in page-window mode the seek costs O(window), not
+  a replay of the epoch.
+- **Pipelined host stage**: iteration decodes/stacks batches on a small
+  worker pool feeding a bounded in-order queue; ``stats()`` reports
+  ``wait_fraction`` — the share of consumer wall time spent blocked on the
+  queue — so a feed that can't keep a device busy is measurable, not a
+  mystery.  A stuck shard surfaces as a descriptive ``TimeoutError``
+  (snapshot digest, shard, epoch, step), never a raw ``queue.Empty``.
+- **Double-buffered device transfer**: :class:`DeviceFeed` wraps the
+  iterator with a depth-2 device-side buffer — the next batch's
+  ``device_put`` (one call for the whole pytree) is issued while the
+  current ``train_step`` runs, so the step loop never blocks on host work.
 """
 
 from __future__ import annotations
 
+import bisect
+import collections
+import concurrent.futures as cf
 import hashlib
-import queue
 import threading
-from typing import Any, Dict, Iterator, List, Optional
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from typing import Union
-
 from ..core.dataset import CheckoutPlan, Snapshot
 from .components import decode_packed
 
-__all__ = ["ShardedSnapshotLoader", "LoaderState"]
+__all__ = ["ShardedSnapshotLoader", "DeviceFeed", "LoaderState"]
 
 SnapshotLike = Union[Snapshot, CheckoutPlan]
 
 LoaderState = Dict[str, Any]
+
+# Feed-surface methods a snapshot must expose for page-window mode.
+_PAGE_SURFACE = ("page_count", "page_sizes", "read_pages", "read_entries",
+                 "pages_digest", "count")
 
 
 def _order(record_ids: List[str], epoch: int, seed: int) -> List[str]:
@@ -85,7 +114,24 @@ def _order_fast(record_ids: List[str], epoch: int, seed: int) -> List[str]:
     return [record_ids[i] for i in perm]
 
 
+def _page_perm(n_pages: int, epoch: int, seed: int) -> List[int]:
+    """Deterministic page permutation — same seeded-hash sort as
+    :func:`_order`, keyed on the page's position in the directory (pages
+    are content-addressed, so position is stable for a fixed snapshot)."""
+    sha = hashlib.sha256
+    prefix = f"{seed}:{epoch}:page:".encode()
+    return sorted(range(n_pages),
+                  key=lambda pi: sha(prefix + str(pi).encode()).digest())
+
+
 class ShardedSnapshotLoader:
+    # How many (epoch, group) windows stay resident: the active window, its
+    # neighbor (a batch may straddle a group boundary), and headroom for
+    # decode workers prefetching the next batch.  This bound IS the
+    # page-window memory contract: peak resident ids <=
+    # _GROUP_CACHE_CAP * window_pages * page_size.
+    _GROUP_CACHE_CAP = 3
+
     def __init__(
         self,
         snapshot: SnapshotLike,
@@ -97,8 +143,14 @@ class ShardedSnapshotLoader:
         prefetch: int = 2,
         timeout_s: float = 60.0,
         cache_epoch_orders: bool = True,
+        shuffle: str = "auto",
+        window_pages: int = 8,
+        decode_workers: int = 2,
+        auto_page_window_min: int = 100_000,
     ):
         assert batch_size % n_shards == 0
+        if shuffle not in ("auto", "global", "page_window"):
+            raise ValueError(f"unknown shuffle mode {shuffle!r}")
         self.snapshot = snapshot
         self.batch = batch_size
         self.local_batch = batch_size // n_shards
@@ -108,22 +160,74 @@ class ShardedSnapshotLoader:
         self.seed = seed
         self.prefetch = prefetch
         self.timeout_s = timeout_s
+        self.window_pages = int(window_pages)
+        self.decode_workers = max(1, int(decode_workers))
         self.epoch = 0
         self.step = 0
-        self._content = snapshot.content_digest()
         # ``cache_epoch_orders=False`` restores the pre-cache behaviour
         # (recompute the permutation every batch) — benchmark baseline only.
         self.cache_epoch_orders = cache_epoch_orders
         self._ids: Optional[List[str]] = None
+        self._n: Optional[int] = None
         self._order_cache: Dict[tuple, List[str]] = {}
+        # page-window state: per-(epoch, seed) page plan + resident windows
+        self._page_plan_cache: Dict[tuple, Tuple[List[List[int]], List[int]]] = {}
+        self._groups: "collections.OrderedDict[tuple, Tuple[List[str], Dict[str, Any]]]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._stats: Dict[str, float] = {
+            "batches": 0, "wait_time_s": 0.0, "run_time_s": 0.0,
+            "read_time_s": 0.0, "decode_time_s": 0.0,
+            "pages_streamed": 0, "resident_ids": 0, "peak_resident_ids": 0,
+        }
+        has_pages = all(hasattr(snapshot, m) for m in _PAGE_SURFACE)
+        if shuffle == "page_window":
+            if not has_pages:
+                raise ValueError(
+                    "shuffle='page_window' needs the page-granular feed "
+                    "surface (CheckoutPlan / Snapshot); this snapshot lacks "
+                    f"{[m for m in _PAGE_SURFACE if not hasattr(snapshot, m)]}")
+            self._mode = "page_window"
+        elif shuffle == "global" or not has_pages:
+            self._mode = "global"
+        else:  # auto: stream only when the full permutation would hurt
+            self._mode = ("page_window"
+                          if int(snapshot.count()) >= auto_page_window_min
+                          else "global")
+        # Content identity: page-window feeds hash the page directory rows
+        # (O(pages), no record materialization); global mode keeps the exact
+        # legacy per-record digest so existing checkpoints keep restoring.
+        self._content = (snapshot.pages_digest() if self._mode == "page_window"
+                         else snapshot.content_digest())
 
     # ---------------------------------------------------------------- state
 
     def state(self) -> LoaderState:
-        return {"snapshot_content": self._content, "epoch": self.epoch,
-                "step": self.step, "seed": self.seed}
+        st: LoaderState = {"snapshot_content": self._content,
+                           "epoch": self.epoch, "step": self.step,
+                           "seed": self.seed, "shuffle": self._mode}
+        if self._mode == "page_window":
+            st["window_pages"] = self.window_pages
+            per = self._per_epoch()
+            pos = (self.step % per) * self.batch if per else 0
+            groups, cum = self._page_plan(self.step // per if per else 0)
+            g = min(bisect.bisect_right(cum, pos) - 1, len(groups) - 1)
+            st["cursor"] = {"group": g, "offset": pos - cum[g]}
+        return st
 
     def restore(self, state: LoaderState) -> None:
+        mode = state.get("shuffle", "global")
+        if mode != self._mode:
+            raise ValueError(
+                f"loader restore across shuffle modes: checkpoint was "
+                f"{mode!r}, this loader is {self._mode!r} — the batch "
+                "streams differ (refusing silent data drift)")
+        if self._mode == "page_window" and \
+                int(state.get("window_pages", -1)) != self.window_pages:
+            raise ValueError(
+                "loader restore with a different window_pages "
+                f"({state.get('window_pages')} != {self.window_pages}) — "
+                "the in-window shuffle differs (refusing silent data drift)")
         if state["snapshot_content"] != self._content:
             raise ValueError(
                 "loader restore onto a different snapshot: "
@@ -133,12 +237,23 @@ class ShardedSnapshotLoader:
         self.step = int(state["step"])
         self.seed = int(state["seed"])
 
-    # ---------------------------------------------------------------- batches
+    # ---------------------------------------------------------------- order
 
     def _record_ids(self) -> List[str]:
         if self._ids is None:
             self._ids = list(self.snapshot.record_ids())
         return self._ids
+
+    def _count(self) -> int:
+        if self._n is None:
+            if self._mode == "page_window":
+                self._n = int(self.snapshot.count())
+            else:
+                self._n = len(self._record_ids())
+        return self._n
+
+    def _per_epoch(self) -> int:
+        return self._count() // self.batch     # drop ragged tail
 
     def _epoch_order(self, epoch: int) -> List[str]:
         """Deterministic epoch permutation, computed once per (epoch, seed).
@@ -150,16 +265,91 @@ class ShardedSnapshotLoader:
         if not self.cache_epoch_orders:
             return _order(self._record_ids(), epoch, self.seed)
         key = (epoch, self.seed)
-        order = self._order_cache.get(key)
-        if order is None:
-            order = _order_fast(self._record_ids(), epoch, self.seed)
-            # keep the current and previous epoch only (restore() can step
-            # back); anything older is dead weight
-            self._order_cache = {
-                k: v for k, v in self._order_cache.items()
-                if k[0] >= epoch - 1 and k[1] == self.seed}
-            self._order_cache[key] = order
+        with self._lock:
+            order = self._order_cache.get(key)
+            if order is None:
+                order = _order_fast(self._record_ids(), epoch, self.seed)
+                # keep the current and previous epoch only (restore() can
+                # step back); anything older is dead weight
+                self._order_cache = {
+                    k: v for k, v in self._order_cache.items()
+                    if k[0] >= epoch - 1 and k[1] == self.seed}
+                self._order_cache[key] = order
         return order
+
+    # -------------------------------------------------------- page windows
+
+    def _page_plan(self, epoch: int) -> Tuple[List[List[int]], List[int]]:
+        """(window groups, cumulative record offsets) for one epoch.
+
+        Pure directory metadata — page counts come from ``page_sizes()``,
+        so seeking to any stream position never reads a page.  Groups are
+        consecutive runs of ``window_pages`` pages of the per-epoch page
+        permutation; ``cum[g]`` is the global stream position of group
+        ``g``'s first record.
+        """
+        key = (epoch, self.seed)
+        with self._lock:
+            hit = self._page_plan_cache.get(key)
+            if hit is not None:
+                return hit
+            sizes = list(self.snapshot.page_sizes())
+            perm = _page_perm(len(sizes), epoch, self.seed)
+            W = max(1, self.window_pages)
+            groups = [perm[i:i + W] for i in range(0, len(perm), W)]
+            cum = [0]
+            for grp in groups:
+                cum.append(cum[-1] + sum(sizes[pi] for pi in grp))
+            self._page_plan_cache = {
+                k: v for k, v in self._page_plan_cache.items()
+                if k[0] >= epoch - 1 and k[1] == self.seed}
+            self._page_plan_cache[key] = (groups, cum)
+            return groups, cum
+
+    def _window(self, epoch: int, g: int) -> Tuple[List[str], Dict[str, Any]]:
+        """One resident window: (in-window record order, id -> entry map).
+
+        Loads the group's pages through the feed surface (grouped CAS
+        reads under the hood) and shuffles records *within* the window with
+        the same seeded-hash sort as global mode — so a window covering
+        every page IS the global permutation.  Bounded LRU keeps peak
+        resident ids at O(window_pages · page_size).
+        """
+        key = (epoch, self.seed, g)
+        with self._lock:
+            hit = self._groups.get(key)
+            if hit is not None:
+                self._groups.move_to_end(key)
+                return hit
+        groups, _ = self._page_plan(epoch)
+        entries: Dict[str, Any] = {}
+        for page in self.snapshot.read_pages(groups[g]):
+            for e in page:
+                entries[e.record_id] = e
+        order = _order_fast(list(entries), epoch, self.seed)
+        with self._lock:
+            self._groups[key] = (order, entries)
+            self._groups.move_to_end(key)
+            while len(self._groups) > self._GROUP_CACHE_CAP:
+                self._groups.popitem(last=False)
+            resident = sum(len(o) for o, _ in self._groups.values())
+            self._stats["pages_streamed"] += len(groups[g])
+            self._stats["resident_ids"] = resident
+            self._stats["peak_resident_ids"] = max(
+                self._stats["peak_resident_ids"], resident)
+        return order, entries
+
+    def _stream_entries(self, epoch: int, positions: List[int]) -> List[Any]:
+        """Entries at the given global stream positions (page-window mode)."""
+        groups, cum = self._page_plan(epoch)
+        out = []
+        for pos in positions:
+            g = min(bisect.bisect_right(cum, pos) - 1, len(groups) - 1)
+            order, entries = self._window(epoch, g)
+            out.append(entries[order[pos - cum[g]]])
+        return out
+
+    # ---------------------------------------------------------------- batches
 
     def _decode_row(self, payload: bytes) -> Dict[str, np.ndarray]:
         tokens, segments, positions = decode_packed(payload)
@@ -178,72 +368,119 @@ class ShardedSnapshotLoader:
             return [self._decode_row(buf) for buf in reader(rids)]
         return [self._read(rid) for rid in rids]
 
-    def next_batch(self) -> Dict[str, np.ndarray]:
-        """The local (per-shard) slice of global batch ``self.step``."""
-        order = self._epoch_order(self.epoch)
-        per_epoch = len(order) // self.batch     # drop ragged tail
+    def _batch_at(self, gstep: int) -> Dict[str, np.ndarray]:
+        """The local (per-shard) slice of global batch ``gstep`` — a pure
+        function of (snapshot, seed, gstep), safe to compute on any worker
+        thread in any order."""
+        per_epoch = self._per_epoch()
         if per_epoch == 0:
             raise ValueError("snapshot smaller than one global batch")
-        step_in_epoch = self.step % per_epoch
-        if self.step and step_in_epoch == 0:
-            self.epoch += 1
-            order = self._epoch_order(self.epoch)
+        epoch, step_in_epoch = divmod(gstep, per_epoch)
         base = step_in_epoch * self.batch
-        rids = [order[base + self.shard_id + j * self.n_shards]
-                for j in range(self.local_batch)]
-        rows = self._read_rows(rids)
-        self.step += 1
+        positions = [base + self.shard_id + j * self.n_shards
+                     for j in range(self.local_batch)]
+        t0 = time.perf_counter()
+        if self._mode == "page_window":
+            entries = self._stream_entries(epoch, positions)
+            payloads = self.snapshot.read_entries(entries)
+            t1 = time.perf_counter()
+            rows = [self._decode_row(buf) for buf in payloads]
+        else:
+            order = self._epoch_order(epoch)
+            rids = [order[p] for p in positions]
+            t1 = time.perf_counter()
+            rows = self._read_rows(rids)
+        t2 = time.perf_counter()
         out = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
         # mask labels at padding (segment -1)
         out["labels"] = np.where(out["segments"] >= 0, out["labels"], -1)
+        t3 = time.perf_counter()
+        with self._lock:
+            self._stats["read_time_s"] += t1 - t0
+            self._stats["decode_time_s"] += (t2 - t1) + (t3 - t2)
+        return out
+
+    def _note_delivered(self, gstep: int) -> None:
+        self.step = gstep + 1
+        self.epoch = gstep // self._per_epoch()
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        """The local (per-shard) slice of global batch ``self.step``."""
+        gstep = self.step
+        out = self._batch_at(gstep)
+        self._note_delivered(gstep)
+        with self._lock:
+            self._stats["batches"] += 1
         return out
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
-        stop = threading.Event()
-
-        def _put(item) -> bool:
-            # Never block forever on a full queue: the consumer may be gone
-            # (generator closed / errored), so re-check ``stop`` between
-            # bounded put attempts instead of deadlocking the worker.
-            while not stop.is_set():
-                try:
-                    q.put(item, timeout=0.1)
-                    return True
-                except queue.Full:
-                    continue
-            return False
-
-        def worker():
-            while not stop.is_set():
-                try:
-                    item = self.next_batch()
-                except Exception as e:  # surface errors to the consumer
-                    _put(e)
-                    return
-                # the batch is computed exactly once, then offered until it
-                # lands (the old put-or-recompute loop silently dropped a
-                # batch each time the queue was full at the wrong moment)
-                if not _put(item):
-                    return
-
-        t = threading.Thread(target=worker, daemon=True)
-        t.start()
+        """Pipelined iteration: batches are computed on a decode worker
+        pool, delivered strictly in order through a bounded queue of
+        in-flight futures.  Consumer blocked-time is accounted as
+        ``wait_time_s`` (vs ``run_time_s`` spent in the consumer's own
+        code), which :meth:`stats` turns into ``wait_fraction``.
+        """
+        pool = cf.ThreadPoolExecutor(max_workers=self.decode_workers,
+                                     thread_name_prefix="loader-decode")
+        depth = max(1, self.prefetch)
+        pending: "collections.deque" = collections.deque()
+        next_step = self.step
+        timed_out = False
+        t_last = time.perf_counter()
         try:
             while True:
-                item = q.get(timeout=self.timeout_s)
-                if isinstance(item, Exception):
-                    raise item
-                yield item
+                while len(pending) < depth:
+                    pending.append(
+                        (next_step, pool.submit(self._batch_at, next_step)))
+                    next_step += 1
+                gstep, fut = pending.popleft()
+                t0 = time.perf_counter()
+                try:
+                    batch = fut.result(timeout=self.timeout_s)
+                except (TimeoutError, cf.TimeoutError):
+                    if fut.done():   # the batch itself raised TimeoutError
+                        raise
+                    timed_out = True
+                    per = max(1, self._per_epoch())
+                    raise TimeoutError(
+                        f"loader shard stuck: no batch within "
+                        f"{self.timeout_s:.1f}s (snapshot "
+                        f"{self._content[:12]}, shard {self.shard_id}/"
+                        f"{self.n_shards}, epoch {gstep // per}, "
+                        f"step {gstep})") from None
+                t1 = time.perf_counter()
+                self._note_delivered(gstep)
+                with self._lock:
+                    self._stats["batches"] += 1
+                    self._stats["wait_time_s"] += t1 - t0
+                    self._stats["run_time_s"] += t0 - t_last
+                yield batch
+                t_last = time.perf_counter()
         finally:
-            stop.set()
-            # drain so a worker mid-``put`` wakes immediately, then reap it
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
-            t.join(timeout=5.0)
+            for _, fut in pending:
+                fut.cancel()
+            # A genuinely stuck read can't be joined — leave it to the
+            # daemon-less pool thread and don't hang the consumer's exit.
+            pool.shutdown(wait=not timed_out, cancel_futures=True)
+
+    # ---------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, Any]:
+        """Feed health counters.
+
+        ``wait_fraction`` is the share of consumer wall time spent blocked
+        on the prefetch queue during iteration (0.0 == the device never
+        waited on host work); ``pages_streamed`` / ``peak_resident_ids``
+        expose the page-window accounting the memory contract is tested
+        against."""
+        with self._lock:
+            s: Dict[str, Any] = dict(self._stats)
+        busy = s["wait_time_s"] + s["run_time_s"]
+        s["wait_fraction"] = (s["wait_time_s"] / busy) if busy > 0 else 0.0
+        s["mode"] = self._mode
+        s["window_pages"] = self.window_pages if self._mode == "page_window" \
+            else None
+        return s
 
     # ---------------------------------------------------------------- device
 
@@ -256,3 +493,62 @@ class ShardedSnapshotLoader:
             k: jax.device_put(v, NamedSharding(mesh, specs[k]))
             for k, v in batch.items()
         }
+
+
+class DeviceFeed:
+    """Depth-``depth`` double-buffered host→device feed over a loader.
+
+    Pulls host batches from the loader's pipelined iterator, issues ONE
+    ``jax.device_put`` for the whole batch pytree (donating leaves that are
+    already device arrays), and keeps ``depth`` transferred batches in
+    flight — ``device_put`` dispatch is asynchronous, so the next batch's
+    transfer overlaps the current ``train_step``.  Yields ``(device_batch,
+    loader_state)`` pairs: the paired state is taken exactly when the host
+    batch was consumed, so checkpointing it restores onto a bit-identical
+    stream even while later batches are already buffered on device.
+
+    ``shardings`` is a pytree of shardings matching the batch (or a single
+    sharding); alternatively ``sharding_fn(host_batch)`` builds it lazily
+    from the first batch (the usual route via ``batch_specs``).  With
+    neither, batches land on the default device.
+    """
+
+    def __init__(self, loader: ShardedSnapshotLoader, shardings=None,
+                 sharding_fn=None, depth: int = 2, donate: bool = True):
+        self.loader = loader
+        self.depth = max(1, int(depth))
+        self.donate = donate
+        self._shardings = shardings
+        self._sharding_fn = sharding_fn
+        self._stats = {"transfers": 0, "put_dispatch_s": 0.0}
+
+    def _put(self, host_batch):
+        t0 = time.perf_counter()
+        if self._shardings is None and self._sharding_fn is not None:
+            self._shardings = self._sharding_fn(host_batch)
+        if self._shardings is None:
+            out = jax.device_put(host_batch)
+        else:
+            donate = (jax.tree.map(lambda x: isinstance(x, jax.Array),
+                                   host_batch)
+                      if self.donate else False)
+            out = jax.device_put(host_batch, self._shardings, donate=donate)
+        self._stats["transfers"] += 1
+        self._stats["put_dispatch_s"] += time.perf_counter() - t0
+        return out
+
+    def __iter__(self):
+        it = iter(self.loader)
+        buf: "collections.deque" = collections.deque()
+        try:
+            while True:
+                while len(buf) < self.depth:
+                    host = next(it)
+                    state = self.loader.state()   # state paired to `host`
+                    buf.append((self._put(host), state))
+                yield buf.popleft()
+        finally:
+            it.close()
+
+    def stats(self) -> Dict[str, Any]:
+        return dict(self._stats)

@@ -34,8 +34,8 @@ from ..configs import get_config, get_smoke_config
 from ..core import Pipeline, Record, Workflow
 from ..core.lineage import NodeKind
 from ..platform import Platform
-from ..data import (PackComponent, ShardedSnapshotLoader, SplitComponent,
-                    TokenizeComponent)
+from ..data import (DeviceFeed, PackComponent, ShardedSnapshotLoader,
+                    SplitComponent, TokenizeComponent)
 from ..models import RuntimeConfig, build_model
 from ..train import (TrainConfig, load_checkpoint, make_train_step,
                      save_checkpoint)
@@ -91,6 +91,12 @@ def main(argv=None) -> dict:
                          "from the platform checkpoint")
     ap.add_argument("--checkpoint-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--shuffle", default="auto",
+                    choices=["auto", "global", "page_window"],
+                    help="loader shuffle mode (auto: page-window streaming "
+                         "above the size threshold, else legacy global)")
+    ap.add_argument("--window-pages", type=int, default=8,
+                    help="page-window shuffle width (pages per window)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -108,7 +114,12 @@ def main(argv=None) -> dict:
     snap = plat.dataset("corpus/packed").checkout()
     print(f"platform: snapshot {snap.snapshot_id} with {len(snap)} packs")
 
-    loader = ShardedSnapshotLoader(snap, args.batch, args.seq_len)
+    # The loader feeds from the lazy plan (page-granular read surface; the
+    # registered snapshot above carries lineage) — page-window streaming
+    # never materializes the manifest, global mode is the legacy baseline.
+    loader = ShardedSnapshotLoader(
+        plat.dataset("corpus/packed").plan(), args.batch, args.seq_len,
+        shuffle=args.shuffle, window_pages=args.window_pages)
     train_cfg = TrainConfig(optimizer=OptimizerConfig(
         name="adamw", lr=args.lr, warmup_steps=10, total_steps=args.steps))
     opt = make_optimizer(train_cfg.optimizer)
@@ -126,22 +137,37 @@ def main(argv=None) -> dict:
     losses = []
     step = 0
 
+    from jax.sharding import NamedSharding
+
+    def batch_shardings(host_batch):
+        return {k: NamedSharding(mesh, s)
+                for k, s in batch_specs(host_batch, rules).items()}
+
     def do_train(until: int):
+        """Drive the step loop from the double-buffered device feed: the
+        next batch's host decode AND device transfer overlap the current
+        train_step, and each yielded batch carries the loader state that
+        makes its checkpoint bit-exact to resume."""
         nonlocal params, opt_state, step
-        while step < until:
-            batch = loader.next_batch()
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            step += 1
-            losses.append(float(metrics["loss"]))
-            if step % args.log_every == 0 or step == until:
-                print(f"step {step:5d} loss {losses[-1]:.4f}")
-            if step % args.checkpoint_every == 0:
-                cid = save_checkpoint(
-                    dm, f"checkpoints/{cfg.name}", step, params, opt_state,
-                    extra={"loader": loader.state()},
-                    data_snapshot_id=snap.snapshot_id, run_node=run_node)
-                print(f"  checkpointed step {step} -> version {cid[:12]}")
+        if step >= until:
+            return
+        feed_it = iter(DeviceFeed(loader, sharding_fn=batch_shardings))
+        try:
+            while step < until:
+                batch, loader_state = next(feed_it)
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                step += 1
+                losses.append(float(metrics["loss"]))
+                if step % args.log_every == 0 or step == until:
+                    print(f"step {step:5d} loss {losses[-1]:.4f}")
+                if step % args.checkpoint_every == 0:
+                    cid = save_checkpoint(
+                        dm, f"checkpoints/{cfg.name}", step, params, opt_state,
+                        extra={"loader": loader_state},
+                        data_snapshot_id=snap.snapshot_id, run_node=run_node)
+                    print(f"  checkpointed step {step} -> version {cid[:12]}")
+        finally:
+            feed_it.close()   # stop decode workers; buffered batches drop
 
     if args.kill_at and args.kill_at < args.steps:
         do_train(args.kill_at)
@@ -162,6 +188,11 @@ def main(argv=None) -> dict:
                           data_snapshot_id=snap.snapshot_id,
                           run_node=run_node)
     print(f"final checkpoint -> {cid[:12]}")
+    ld_stats = loader.stats()
+    print(f"loader: mode={ld_stats['mode']} "
+          f"wait_fraction={ld_stats['wait_fraction']:.3f} "
+          f"pages_streamed={int(ld_stats['pages_streamed'])} "
+          f"peak_resident_ids={int(ld_stats['peak_resident_ids'])}")
     first, last = np.mean(losses[:5]), np.mean(losses[-5:])
     print(f"loss: first5={first:.4f} last5={last:.4f} "
           f"({'improved' if last < first else 'NOT improved'})")
@@ -172,7 +203,8 @@ def main(argv=None) -> dict:
                                                   step))
     print(f"lineage ancestors of final checkpoint: {len(anc)} node(s)")
     return {"losses": losses, "steps": step, "dm": dm, "platform": plat,
-            "checkpoint": cid, "improved": bool(last < first)}
+            "checkpoint": cid, "improved": bool(last < first),
+            "loader": loader, "loader_stats": ld_stats}
 
 
 if __name__ == "__main__":

@@ -146,7 +146,7 @@ def load_checkpoint(
     if like_opt is not None:
         opt_state = _read_tree(snap, like_opt, "opt/", opt_shardings, actor)
     extra: Dict[str, Any] = {}
-    if "extra.json" in set(snap.record_ids()):
+    if any(rid == "extra.json" for rid in snap.iter_record_ids()):
         extra = json.loads(snap.read("extra.json").decode())
     return params, opt_state, extra
 
