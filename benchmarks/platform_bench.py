@@ -9,6 +9,7 @@ each row is "one paper feature, measured".
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -478,6 +479,59 @@ def run(smoke: bool = False,
                  "meta round trips per warm commit (batched; count, "
                  "not time)"))
 
+    # --- concurrent multi-writer commits --------------------------------------
+    # N threads race disjoint check_ins against ONE shared DatasetManager
+    # (head CAS conflicts resolved by optimistic rebase).  Reported rate
+    # is commits/s at the highest writer count; correctness (zero lost
+    # updates, linear history) is asserted inline — a regression aborts
+    # the bench rather than reporting a wrong-but-fast number.
+    MW_COMMITS = 4 if smoke else 10
+    mw_rates = {}
+    mw_lost = 0
+    for nw in (1, 2, 4):
+        dm = DatasetManager(ObjectStore(MemoryBackend()))
+        dm.check_in("mw", [Record("seed", b"seed " * 8, {})], actor="bench")
+        errors: List[BaseException] = []
+
+        def _writer(w, dm=dm, errors=errors):
+            try:
+                for j in range(MW_COMMITS):
+                    dm.check_in("mw", [Record(
+                        f"w{w}/{j:03d}", f"payload w{w}/{j}".encode() * 4,
+                        {"w": w})], actor=f"w{w}")
+            except BaseException as exc:  # noqa: BLE001 - report, don't hang
+                errors.append(exc)
+
+        threads = [threading.Thread(target=_writer, args=(w,))
+                   for w in range(nw)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        # verify: linear first-parent chain covering every commit
+        chain = []
+        cur = dm.versions.get_branch("mw", "main")
+        while cur:
+            c = dm.versions.get_commit(cur)
+            assert len(c.parents) <= 1, "multi-writer history not linear"
+            chain.append(c.commit_id)
+            cur = c.parents[0] if c.parents else None
+        expect = {f"w{w}/{j:03d}" for w in range(nw)
+                  for j in range(MW_COMMITS)} | {"seed"}
+        snap = dm.checkout("mw", actor="bench", register_snapshot=False)
+        mw_lost += len(expect - set(snap.record_ids()))
+        assert len(chain) == nw * MW_COMMITS + 1, "commit dropped"
+        mw_rates[nw] = nw * MW_COMMITS / dt
+    mw_rate = mw_rates[4]
+    rows.append(("multi_writer_commits_per_s", 1e6 / mw_rate,
+                 f"4 threads x {MW_COMMITS} commits, rebase on conflict; "
+                 f"{mw_rates[1]:.0f}/{mw_rates[2]:.0f}/{mw_rates[4]:.0f} "
+                 f"commits/s @ 1/2/4 writers, {mw_lost} lost"))
+
     if metrics is not None:
         metrics["checkin_throughput_mib_s"] = ingest_mib_s
         metrics["checkin_dedup_speedup"] = checkin_dedup_speedup
@@ -500,6 +554,8 @@ def run(smoke: bool = False,
         metrics["remote_rtt_ms"] = RTT * 1e3
         metrics["remote_checkin_e2e_speedup"] = e2e_speedup
         metrics["remote_checkin_meta_requests"] = int(meta_reqs)
+        metrics["multi_writer_commits_per_s"] = mw_rate
+        metrics["multi_writer_lost_updates"] = int(mw_lost)
 
     return rows
 

@@ -24,6 +24,12 @@ PYTHONPATH=src python benchmarks/loader_bench.py --smoke --json "$SMOKE_JSON"
 echo "== train bench (smoke) =="
 PYTHONPATH=src python benchmarks/train_bench.py --smoke --json "$SMOKE_JSON"
 
+echo "== multi-writer stress (smoke) =="
+# N real processes race check_ins against one FileBackend with injected
+# lost-CAS-response faults; the driver exits non-zero on any lost
+# update, non-linear history, or a ref naming missing state.
+PYTHONPATH=src python scripts/stress_writers.py --procs 3 --commits 10
+
 echo "== bench contract =="
 # the smoke run just produced one document; the committed repo-root file
 # (non-smoke trajectory) must exist and satisfy the same contract —

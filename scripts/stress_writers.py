@@ -1,0 +1,221 @@
+#!/usr/bin/env python
+"""Multi-writer commit stress driver: N processes race one repository.
+
+Each worker process opens its own :class:`~repro.platform.Platform` over
+the SAME :class:`~repro.core.FileBackend` repository and performs M
+``check_in`` calls of records only it writes.  Every head move goes
+through the strict CAS + optimistic-rebase path, so the workers fight for
+the branch head the entire run.  Optionally every worker's conditional
+writes are wrapped in a :class:`SimulatedRemoteBackend` that loses every
+Kth ``put_if`` *response* (``fault_mode="after"``) — the server applied
+the swap, the client must detect its own replay instead of rebasing or,
+worse, double-applying.
+
+After the workers exit the parent re-opens the repository cold and
+asserts the paper-level invariants:
+
+- **durability**: every one of the N*M commits is reachable on the
+  first-parent chain from the final head;
+- **linearity**: that chain is single-parent all the way to the root —
+  concurrent writers serialized into one history, no forks;
+- **zero lost updates**: the final manifest contains every record every
+  worker wrote, with byte-identical payloads;
+- **no dangling refs**: the head resolves, every manifest page loads,
+  and every record blob reads back (refs never name missing state);
+- the commit index (the GC-root source) covers the whole chain.
+
+Exit status is non-zero if any invariant fails.  ``--json`` appends a
+machine-readable result (commits/s, lost updates, rebases) for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+
+def _expected_records(procs: int, commits: int, per_commit: int):
+    """Record id -> payload for every record the run should end with."""
+    out = {}
+    for w in range(procs):
+        for j in range(commits):
+            for k in range(per_commit):
+                rid = f"w{w:02d}/{j:04d}/{k}"
+                out[rid] = f"payload {rid} ".encode() * 4
+    return out
+
+
+def _worker(idx: int, root: str, commits: int, per_commit: int,
+            fault_every: int, page_size: int, on_conflict: str,
+            queue) -> None:
+    """One writer process: M check_ins of disjoint records."""
+    try:
+        from repro.core import FileBackend, ObjectStore, Record
+        from repro.platform import Platform
+
+        backend = FileBackend(root)
+        if fault_every:
+            from repro.store.remote.simulated import SimulatedRemoteBackend
+            backend = SimulatedRemoteBackend(
+                backend, rtt=0.0, fault_every=fault_every,
+                fault_mode="after", fault_ops=("put_if",), seed=idx)
+        plat = Platform.open(ObjectStore(backend), actor=f"w{idx:02d}",
+                             page_size=page_size)
+        ds = plat.dataset("stress")
+        for j in range(commits):
+            recs = [Record(f"w{idx:02d}/{j:04d}/{k}",
+                           f"payload w{idx:02d}/{j:04d}/{k} ".encode() * 4,
+                           {"writer": idx, "seq": j})
+                    for k in range(per_commit)]
+            ds.check_in(recs, message=f"w{idx:02d} #{j}",
+                        on_conflict=on_conflict)
+        plat.close()
+        queue.put((idx, "ok", plat.store.stats.commit_rebases,
+                   plat.store.stats.ref_cas_retries))
+    except BaseException as exc:  # noqa: BLE001 — report, parent decides
+        import traceback
+        queue.put((idx, f"{type(exc).__name__}: {exc}\n"
+                        f"{traceback.format_exc()}", 0, 0))
+
+
+def verify(root: str, procs: int, commits: int, per_commit: int) -> dict:
+    """Cold re-open + invariant checks.  Returns a violations report."""
+    from repro.core import DatasetManager, FileBackend, ObjectStore
+
+    dm = DatasetManager(ObjectStore(FileBackend(root)))
+    violations = []
+
+    head = dm.versions.get_branch("stress", "main")
+    if head is None:
+        return {"violations": ["head ref missing"], "lost_updates": -1}
+
+    # Linearity + durability: first-parent chain from head.
+    chain, cur, seen = [], head, set()
+    while cur is not None:
+        if cur in seen:
+            violations.append(f"history cycle at {cur[:12]}")
+            break
+        seen.add(cur)
+        c = dm.versions.get_commit(cur)  # raises if the ref dangles
+        chain.append(c)
+        if len(c.parents) > 1:
+            violations.append(f"non-linear history: merge at {cur[:12]}")
+        cur = c.parents[0] if c.parents else None
+    if len(chain) != procs * commits:
+        violations.append(
+            f"chain length {len(chain)} != {procs * commits} commits")
+
+    # The commit index is the GC-root source: it must cover the chain.
+    indexed = set(dm.versions.list_commits("stress"))
+    stranded = {c.commit_id for c in chain} - indexed
+    if stranded:
+        violations.append(
+            f"{len(stranded)} chain commits missing from the commit index")
+
+    # Zero lost updates + no dangling refs: every record readable with
+    # byte-identical payload (this loads every manifest page on the way).
+    expected = _expected_records(procs, commits, per_commit)
+    snap = dm.checkout("stress", actor="verify", register_snapshot=False)
+    got = set(snap.record_ids())
+    lost = sorted(set(expected) - got)
+    if lost:
+        violations.append(
+            f"{len(lost)} lost records, e.g. {lost[:5]}")
+    for rid in sorted(got & set(expected)):
+        data = snap.read(rid)
+        if data != expected[rid]:
+            violations.append(f"payload mismatch for {rid}")
+            break
+
+    return {"violations": violations, "lost_updates": len(lost),
+            "chain": len(chain), "records": len(got)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--procs", type=int, default=4)
+    ap.add_argument("--commits", type=int, default=25,
+                    help="check_ins per worker process")
+    ap.add_argument("--records-per-commit", type=int, default=3)
+    ap.add_argument("--root", default=None,
+                    help="repository directory (default: a temp dir)")
+    ap.add_argument("--fault-every", type=int, default=7,
+                    help="lose every Nth put_if response per worker "
+                         "(0 disables fault injection)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="small pages maximize page-level rebase overlap")
+    ap.add_argument("--on-conflict", default="rebase",
+                    choices=("rebase", "error"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append one JSON result line")
+    args = ap.parse_args(argv)
+
+    root = args.root
+    if root is None:
+        import tempfile
+        root = tempfile.mkdtemp(prefix="stress_writers_")
+
+    ctx = mp.get_context("spawn")
+    queue = ctx.Queue()
+    workers = [
+        ctx.Process(target=_worker,
+                    args=(i, root, args.commits, args.records_per_commit,
+                          args.fault_every, args.page_size,
+                          args.on_conflict, queue))
+        for i in range(args.procs)
+    ]
+    t0 = time.perf_counter()
+    for w in workers:
+        w.start()
+    results, failures = [], []
+    for _ in workers:
+        idx, status, rebases, cas_retries = queue.get()
+        results.append((idx, status, rebases, cas_retries))
+        if status != "ok":
+            failures.append(f"worker {idx}: {status}")
+    for w in workers:
+        w.join()
+    elapsed = time.perf_counter() - t0
+
+    total_rebases = sum(r for _, s, r, _ in results if s == "ok")
+    total_cas_retries = sum(c for _, s, _, c in results if s == "ok")
+    report = verify(root, args.procs, args.commits, args.records_per_commit)
+    n_commits = args.procs * args.commits
+    rate = n_commits / elapsed if elapsed > 0 else 0.0
+
+    print(f"stress_writers: {args.procs} procs x {args.commits} commits "
+          f"({args.records_per_commit} rec/commit), fault_every="
+          f"{args.fault_every}, page_size={args.page_size}")
+    print(f"  {n_commits} commits in {elapsed:.2f}s = {rate:.1f} commits/s, "
+          f"{total_rebases} rebases, {total_cas_retries} CAS retries")
+    print(f"  verify: chain={report.get('chain')} records="
+          f"{report.get('records')} lost={report.get('lost_updates')}")
+    for msg in failures + report["violations"]:
+        print(f"  VIOLATION: {msg}", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps({
+                "procs": args.procs, "commits": args.commits,
+                "commits_per_s": rate,
+                "rebases": total_rebases,
+                "cas_retries": total_cas_retries,
+                "lost_updates": report["lost_updates"],
+                "violations": failures + report["violations"],
+            }) + "\n")
+
+    if failures or report["violations"]:
+        return 1
+    print("stress_writers: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

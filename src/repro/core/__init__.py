@@ -28,8 +28,9 @@ from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import (ALL, And, Cmp, Not, Or, Query, QueryParseError, attr,
                     parse_where, record_id_in, tag_in)
 from .revocation import RevocationEngine, RevocationReport, RevokedError
-from .store import (BlobRef, FileBackend, IntegrityError, MemoryBackend,
-                    NotFoundError, ObjectStore, StorageBackend)
+from .store import (BlobRef, CommitConflictError, FileBackend,
+                    IntegrityError, MemoryBackend, NotFoundError,
+                    ObjectStore, StorageBackend)
 from .transforms import (BatchComponent, Component, FilterComponent,
                          FlatMapComponent, HumanTask, HumanTaskQueue,
                          MapComponent, Pipeline, ProgramComponent,
@@ -51,8 +52,8 @@ __all__ = [
     "EdgeKind", "LineageGraph", "NodeKind",
     "RevocationEngine", "RevocationReport", "RevokedError",
     "AttributeIndex", "PagedAttributeIndex",
-    "BlobRef", "FileBackend", "IntegrityError", "MemoryBackend",
-    "NotFoundError", "ObjectStore", "StorageBackend",
+    "BlobRef", "CommitConflictError", "FileBackend", "IntegrityError",
+    "MemoryBackend", "NotFoundError", "ObjectStore", "StorageBackend",
     "BatchComponent", "Component", "FilterComponent", "FlatMapComponent",
     "HumanTask", "HumanTaskQueue", "MapComponent", "Pipeline",
     "ProgramComponent", "WaitingForHuman", "code_fingerprint", "component",

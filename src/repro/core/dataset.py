@@ -15,16 +15,18 @@ import bisect
 import fnmatch
 import hashlib
 import json
+import random
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Iterable, Iterator, List, Mapping,
-                    Optional, Sequence, Tuple, Union)
+from typing import (Callable, Dict, FrozenSet, Iterable, Iterator, List,
+                    Mapping, Optional, Sequence, Tuple, Union)
 
 from .acl import AccessController, Action
 from .lineage import EdgeKind, LineageGraph, NodeKind
 from .query import ALL, Cmp, Query, TrueQuery, as_query
-from .store import BlobRef, MemoryBackend, NotFoundError, ObjectStore
+from .store import (BlobRef, CommitConflictError, MemoryBackend,
+                    NotFoundError, ObjectStore)
 from .versioning import (Commit, Manifest, RecordEntry, VersionDiff,
                          VersionStore)
 
@@ -618,6 +620,16 @@ class DatasetManager:
 
     # ------------------------------------------------------------------ check-in
 
+    # Optimistic multi-writer retry: how many times a lost head CAS is
+    # rebased onto the new head before giving up, and the backoff base
+    # (doubled per attempt, jittered, capped at 1 s) so contended writers
+    # spread out instead of thundering.  The bound is sized for the worst
+    # case the stress harness produces — many processes all racing one
+    # fresh branch with injected CAS faults slowing every swap.
+    _REBASE_MAX_RETRIES = 16
+    _REBASE_BACKOFF_S = 0.01
+    _REBASE_BACKOFF_CAP_S = 1.0
+
     def check_in(
         self,
         dataset: str,
@@ -632,6 +644,8 @@ class DatasetManager:
         produced_by: Optional[str] = None,
         meta: Optional[Mapping[str, object]] = None,
         replace: bool = False,
+        on_conflict: str = "rebase",
+        notify: bool = True,
     ) -> Commit:
         """Add/replace records on top of ``base`` (default: branch head).
 
@@ -650,9 +664,151 @@ class DatasetManager:
         dropped); the commit still parents onto ``base`` so history and
         diffs are preserved.
 
+        **Concurrent writers.** The branch head moves through a strict
+        compare-and-swap; losing the swap never loses the update.  With
+        ``on_conflict="rebase"`` (default) the loser re-reads the new head
+        and replays its delta on top — disjoint-page writers merge by pure
+        page-digest skipping, overlapping pages re-apply record adds and
+        removes with deterministic per-record last-writer-wins — inside a
+        bounded, jitter-backed retry loop.  ``on_conflict="error"`` raises
+        :class:`~repro.core.store.CommitConflictError` (naming the
+        dataset, ref, and overlapping records) when the rebase would touch
+        a record the winning commit also changed; disjoint writers still
+        merge silently.  Each rebase is counted in
+        ``store.stats.commit_rebases``.
+
         ``derived_from`` — lineage node ids this version derives from.
         ``produced_by``  — workflow/component run node id.
+        ``notify=False`` skips the commit listeners (callers composing a
+        larger atomic flush run them via :meth:`notify_commit` once their
+        own scope has landed).
         """
+        if on_conflict not in ("rebase", "error"):
+            raise ValueError("on_conflict must be 'rebase' or 'error'")
+        retryable = {f"refs/{dataset}/heads/{branch}",
+                     f"commits/{dataset}", f"recindex/{dataset}"}
+        state: Dict[str, object] = {}
+        attempt = 0
+        while True:
+            try:
+                commit = self._check_in_attempt(
+                    dataset, records, actor, message, branch, version_tags,
+                    base, remove_ids, derived_from, produced_by, meta,
+                    replace, on_conflict, attempt, state)
+                break
+            except CommitConflictError as err:
+                # Only head/commit-index/record-index races are rebased;
+                # a conflict naming records is the strict mode's verdict
+                # and anything else is not ours to absorb.
+                if err.records or err.ref not in retryable \
+                        or attempt >= self._REBASE_MAX_RETRIES:
+                    raise
+                cid = state.pop("commit_id", None)
+                if cid and self._commit_published(
+                        dataset, branch, cid, state.get("first_base")):
+                    # Our head swap actually APPLIED — its response was
+                    # lost and another writer built on top before the CAS
+                    # loop could observe the replay.  The commit is live
+                    # history, not junk: retrying would double-publish it
+                    # and scrub a reachable commit from the GC-root index.
+                    commit = self.versions.get_commit(cid)
+                    break
+                attempt += 1
+                self.store.stats.commit_rebases += 1
+                # The aborted attempt's commit id may already sit in the
+                # commit/record indexes (they land before the head CAS that
+                # just lost) — remember it so the retry scrubs it out.
+                if cid:
+                    state.setdefault("junk", set()).add(cid)
+                time.sleep(random.uniform(0.0, min(
+                    self._REBASE_BACKOFF_CAP_S,
+                    self._REBASE_BACKOFF_S * (2 ** (attempt - 1)))))
+        # Listeners run after the flush: a triggered workflow's own
+        # check_ins must see (and build on) fully-landed state.
+        if notify:
+            self.notify_commit(dataset, commit)
+        return commit
+
+    def _commit_published(self, dataset: str, branch: str, cid: str,
+                          stop: Optional[str]) -> bool:
+        """Did ``cid`` actually land on the branch despite a lost CAS?
+        Walks the current head's first-parent chain back to ``stop`` (the
+        attempt's base) — a conditional swap whose response was lost still
+        applied iff the commit is an ancestor of whatever head we lost to."""
+        cur = self.versions.get_branch(dataset, branch)
+        seen = set()
+        while cur is not None and cur != stop and cur not in seen:
+            if cur == cid:
+                return True
+            seen.add(cur)
+            try:
+                c = self.versions.get_commit(cur)
+            except NotFoundError:
+                return False
+            cur = c.parents[0] if c.parents else None
+        return False
+
+    def notify_commit(self, dataset: str, commit: Commit) -> None:
+        """Run the commit listeners (workflow triggers).  ``check_in``
+        calls this itself unless ``notify=False`` deferred it to a caller
+        composing a larger atomic flush."""
+        for fn in self._commit_listeners:
+            fn(dataset, commit)
+
+    def _check_rebase_overlap(
+        self,
+        dataset: str,
+        branch: str,
+        first_base: Optional[str],
+        head: Optional[str],
+        adds: Mapping[str, RecordEntry],
+        removes: Iterable[str],
+        replace: bool,
+    ) -> None:
+        """Strict-mode gate before a rebase attempt: raise if the records
+        this delta touches intersect what moved under us."""
+        ref = f"refs/{dataset}/heads/{branch}"
+        ours = set(adds) | set(removes)
+        if replace:
+            # replace rewrites the whole manifest: any head move conflicts
+            raise CommitConflictError(
+                ref, expected=first_base, current=head,
+                dataset=dataset, records=sorted(ours))
+        if first_base and head:
+            moved = self.versions.diff(first_base, head)
+            theirs = set(moved.added) | set(moved.modified) \
+                | set(moved.removed)
+        elif head:
+            # No common base (we started from an empty branch): everything
+            # now on the head counts as the winner's change set.
+            tree = self.versions.get_commit(head).tree
+            theirs = set(self.versions.get_manifest(tree).record_ids())
+        else:
+            theirs = set()
+        overlap = ours & theirs
+        if overlap:
+            raise CommitConflictError(
+                ref, expected=first_base, current=head,
+                dataset=dataset, records=sorted(overlap))
+
+    def _check_in_attempt(
+        self,
+        dataset: str,
+        records: Iterable[Record],
+        actor: str,
+        message: str,
+        branch: str,
+        version_tags: Sequence[str],
+        base: Optional[str],
+        remove_ids: Sequence[str],
+        derived_from: Sequence[str],
+        produced_by: Optional[str],
+        meta: Optional[Mapping[str, object]],
+        replace: bool,
+        on_conflict: str,
+        attempt: int,
+        state: Dict[str, object],
+    ) -> Commit:
         # The whole commit runs in ONE meta-batch scope: the known read
         # set prefetches in one grouped get, every meta write (dataset
         # info, commit body+index, record index, lineage + audit segments)
@@ -670,9 +826,21 @@ class DatasetManager:
             self.acl.check(actor, Action.WRITE, dataset, note="check_in")
             self._ensure_dataset(dataset, actor)
 
-            base_id = base or self.versions.get_branch(dataset, branch)
-            adds = self._store_records(records)
-            removes = list(remove_ids)
+            head = self.versions.get_branch(dataset, branch)
+            base_id = base or head
+            if "adds" not in state:
+                # Payloads content-address once: blobs flush before any
+                # conflict can surface, so a rebase retry reuses the same
+                # RecordEntry refs without re-hashing or re-uploading.
+                state["adds"] = self._store_records(records)
+                state["removes"] = list(remove_ids)
+                state["first_base"] = base_id
+            if attempt and on_conflict == "error" and base is None:
+                self._check_rebase_overlap(
+                    dataset, branch, state["first_base"], head,
+                    state["adds"], state["removes"], replace)
+            adds = dict(state["adds"])
+            removes = list(state["removes"])
             for rid in removes:
                 adds.pop(rid, None)  # removal wins over a same-call add
 
@@ -696,7 +864,26 @@ class DatasetManager:
                 commit, delta, n_records = self.versions.commit_delta(
                     dataset, base_id, adds, removes,
                     author=actor, message=message, meta=meta)
-            self.versions.set_branch(dataset, branch, commit.commit_id)
+            state["commit_id"] = commit.commit_id
+            junk = frozenset(state.get("junk") or ())
+            if junk:
+                # Scrub this call's own aborted attempts from the GC-root
+                # commit index: their commits never published, so leaving
+                # them would pin dead pages forever.  The merge keeps
+                # scrubbing when the CAS re-reads a copy that has them.
+                ikey = f"commits/{dataset}"
+                idx = [c for c in self.store.get_meta(ikey, default=[])
+                       if c not in junk]
+                if commit.commit_id not in idx:
+                    idx.append(commit.commit_id)
+                self.store.put_meta(ikey, idx)
+                self.store.require_meta_cas(
+                    ikey,
+                    merge=lambda cur, cid=commit.commit_id, junk=junk:
+                        [c for c in (cur or [])
+                         if c not in junk and c != cid] + [cid])
+            self.versions.set_branch(dataset, branch, commit.commit_id,
+                                     strict=True)
             for tag in version_tags:
                 self.versions.set_tag(dataset, tag, commit.commit_id)
 
@@ -704,7 +891,7 @@ class DatasetManager:
             # scans): only the records this commit actually
             # added/changed/removed are indexed, so the blob grows
             # O(delta) per commit, not O(records).
-            self._index_records(dataset, commit.commit_id, delta)
+            self._index_records(dataset, commit.commit_id, delta, drop=junk)
 
             # Lineage: version node + derivation/production edges.
             vnode = version_node_id(dataset, commit.commit_id)
@@ -725,10 +912,6 @@ class DatasetManager:
             # decisions persist with the commit (free inside the batch)
             # instead of waiting for the every-64th-event trigger.
             self.acl.flush_audit()
-        # Listeners run after the flush: a triggered workflow's own
-        # check_ins must see (and build on) fully-landed state.
-        for fn in self._commit_listeners:
-            fn(dataset, commit)
         return commit
 
     # Payload batching: how many records / bytes one grouped
@@ -787,7 +970,8 @@ class DatasetManager:
         return adds
 
     def _index_records(self, dataset: str, commit_id: str,
-                       delta: Union[VersionDiff, Manifest]) -> None:
+                       delta: Union[VersionDiff, Manifest],
+                       drop: FrozenSet[str] = frozenset()) -> None:
         """Event index: record -> commits where it was added/changed or
         removed.  Containment at any commit is reconstructed by walking the
         commit DAG forward from add events (:meth:`versions_with_record`),
@@ -795,26 +979,45 @@ class DatasetManager:
 
         A full :class:`Manifest` is also accepted (compat for out-of-band
         commits, e.g. merges): every record counts as an add event.
+        ``drop`` scrubs events left behind by this call's own aborted
+        rebase attempts (their commits never published).
         """
         if isinstance(delta, Manifest):
             delta = VersionDiff(added=delta.record_ids())
-        if delta.is_empty:
+        if delta.is_empty and not drop:
             return
         key = f"recindex/{dataset}"
-        idx = self.store.get_meta(key, default=None)
-        if idx is None:
-            idx = {"v": 2, "added": {}, "removed": {}}
-        elif "added" not in idx:
-            idx = self._migrate_legacy_index(dataset, idx)
-        for rid in delta.added + delta.modified:
-            cids = idx["added"].setdefault(rid, [])
-            if commit_id not in cids:
-                cids.append(commit_id)
-        for rid in delta.removed:
-            cids = idx["removed"].setdefault(rid, [])
-            if commit_id not in cids:
-                cids.append(commit_id)
-        self.store.put_meta(key, idx)
+
+        def apply(idx):
+            if idx is None:
+                idx = {"v": 2, "added": {}, "removed": {}}
+            elif "added" not in idx:
+                idx = self._migrate_legacy_index(dataset, idx)
+            if drop:
+                for bucket in ("added", "removed"):
+                    table = idx.get(bucket, {})
+                    for rid in list(table):
+                        kept = [c for c in table[rid] if c not in drop]
+                        if kept:
+                            table[rid] = kept
+                        else:
+                            del table[rid]
+            for rid in delta.added + delta.modified:
+                cids = idx["added"].setdefault(rid, [])
+                if commit_id not in cids:
+                    cids.append(commit_id)
+            for rid in delta.removed:
+                cids = idx["removed"].setdefault(rid, [])
+                if commit_id not in cids:
+                    cids.append(commit_id)
+            return idx
+
+        self.store.put_meta(key, apply(self.store.get_meta(key, default=None)))
+        # The index drives revocation: a lost update would hide a record's
+        # containment.  Inside a batch the key goes through CAS with
+        # ``apply`` as the conflict merge — a concurrent writer's events
+        # are kept and this commit's re-applied on top, never clobbered.
+        self.store.require_meta_cas(key, merge=apply)
 
     def _migrate_legacy_index(self, dataset: str, legacy: Dict) -> dict:
         """One-time upgrade of a pre-delta flat index (rid -> [commits]).

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import random
 import threading
 import time
 import uuid
@@ -52,7 +53,7 @@ from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
 
 from .dataset import CheckoutPlan, DatasetManager, Record, version_node_id
 from .lineage import EdgeKind, NodeKind
-from .store import BlobRef, NotFoundError, ObjectStore
+from .store import BlobRef, CommitConflictError, NotFoundError, ObjectStore
 from .transforms import Component, Pipeline, RunContext
 from .versioning import RecordEntry, raw_entry_matches
 
@@ -219,9 +220,12 @@ class DerivationCache:
     (:meth:`gc_roots`) — like the attribute index, cached derivations must
     survive :meth:`DatasetManager.gc`.
 
-    Writes are read-modify-write of the whole map; concurrent writers can
-    lose each other's entries, which only costs a future recompute (the
-    cache is an accelerator, never a correctness dependency).
+    Writes are read-modify-write of the whole map.  Inside a meta batch
+    the pointer swap is CAS-guarded with a re-apply merge (and ordered
+    after the output head it names), so concurrent derivations keep each
+    other's entries; unbatched writers keep the old last-writer-wins
+    semantics, which only costs a future recompute (the cache is an
+    accelerator, never a correctness dependency).
     """
 
     _PTR = "derive/cache"
@@ -255,6 +259,28 @@ class DerivationCache:
         entries = dict(self._load())
         entries[key] = entry
         self._write(entries)
+
+        def merge(cur_ptr):
+            # A concurrent derivation moved the pointer while our batch
+            # flushed: reload the winner's entries (direct backend reads —
+            # the batch is quiesced during flush) and re-apply just this
+            # slot, so neither derivation's cache entry is lost.
+            base: Dict[str, dict] = {}
+            if cur_ptr and cur_ptr.get("blob"):
+                try:
+                    doc = self.store.get_json(cur_ptr["blob"])
+                    base = dict(doc.get("entries", {}))
+                except NotFoundError:
+                    base = {}
+            base[key] = entry
+            ref = self.store.put_json({"v": _CACHE_VERSION, "entries": base})
+            self._memo = (ref.digest, base)
+            return {"blob": ref.digest}
+
+        # after_refs: the slot must never land before the output head it
+        # names — a crash in between must leave "head moved, cache cold",
+        # never "cache warm, head stale".
+        self.store.require_meta_cas(self._PTR, merge=merge, after_refs=True)
 
     def _write(self, entries: Dict[str, dict]) -> None:
         ref = self.store.put_json({"v": _CACHE_VERSION, "entries": entries})
@@ -506,52 +532,81 @@ class DerivationEngine:
                 # payload; check in refs so blobs are not re-hashed.
                 out_for_checkin = prov_entries
 
-        if output_dataset is not None:
-            # replace=True: the derived version's manifest is exactly the
-            # pipeline output (materialized-view semantics) — outputs of
-            # records since deleted/changed in the input must not linger
-            # from the previous head.
-            commit = self.dm.check_in(
-                output_dataset, out_for_checkin, actor,
-                message=message or f"derive {pipeline.name} "
-                                   f"@ {plan.commit_id[:12]}",
-                replace=True,
-                derived_from=all_derived_from,
-                produced_by=produced_by,
-                meta=commit_meta,
-            )
-            res.output_commit = commit.commit_id
-            res.content_digest = self._manifest_digest(commit.tree)
+        if output_dataset is None:
+            return res
 
-        # Post-commit bookkeeping (lineage edge, cache pointer) rides one
-        # meta batch: the check_in above stays outside so its commit
-        # listeners observe fully-landed state.
+        # Transactional publish: the output head (via check_in), the
+        # PRODUCED_BY lineage edge, and the cache slot all ride ONE outer
+        # meta-batch flush — an all-or-nothing multi-ref swap.  The cache
+        # pointer goes through a CAS ordered AFTER the refs pass
+        # (``DerivationCache.put`` registers it), so at every kill point
+        # the invariant holds: a cache slot that names a commit implies
+        # that commit's head already landed — a crash can no longer leave
+        # the slot pointing at an unpublished commit.  A concurrent writer
+        # on the output head surfaces as CommitConflictError at flush (the
+        # joined check_in cannot retry internally), so the bounded rebase
+        # loop lives here.
         store = self.dm.store
-        with store.meta_batch(prefetch=[DerivationCache._PTR,
-                                        self.dm.lineage.pending_seg_key()]):
-            if res.output_commit is not None and deriv is not None:
-                lin = self.dm.lineage
-                lin.add_edge(version_node_id(output_dataset,
-                                             res.output_commit),
-                             deriv.node_id, EdgeKind.PRODUCED_BY)
-                lin.flush()
-
-            if cacheable and update_cache and res.output_commit is not None:
-                with self._lock:
-                    self.cache.put(cache_key, {
-                        "input_commit": plan.commit_id,
-                        "input_dataset": plan.dataset,
-                        "query": qd,
-                        "pipeline": pfp,
-                        "output_dataset": output_dataset,
-                        "output_commit": res.output_commit,
-                        "content": res.content_digest,
-                        "prov": prov_digest,
-                        "prov_bytes": prov_bytes,
-                        "n_inputs": res.n_inputs,
-                        "n_outputs": res.n_outputs,
-                        "created_at": time.time(),
-                    })
+        commit = None
+        attempt = 0
+        while True:
+            try:
+                with store.meta_batch(prefetch=[
+                        DerivationCache._PTR,
+                        self.dm.lineage.pending_seg_key()]):
+                    # replace=True: the derived version's manifest is
+                    # exactly the pipeline output (materialized-view
+                    # semantics) — outputs of records since
+                    # deleted/changed in the input must not linger from
+                    # the previous head.
+                    commit = self.dm.check_in(
+                        output_dataset, out_for_checkin, actor,
+                        message=message or f"derive {pipeline.name} "
+                                           f"@ {plan.commit_id[:12]}",
+                        replace=True,
+                        derived_from=all_derived_from,
+                        produced_by=produced_by,
+                        meta=commit_meta,
+                        notify=False,
+                    )
+                    res.output_commit = commit.commit_id
+                    res.content_digest = self._manifest_digest(commit.tree)
+                    if deriv is not None:
+                        lin = self.dm.lineage
+                        lin.add_edge(version_node_id(output_dataset,
+                                                     res.output_commit),
+                                     deriv.node_id, EdgeKind.PRODUCED_BY)
+                        lin.flush()
+                    if cacheable and update_cache:
+                        with self._lock:
+                            self.cache.put(cache_key, {
+                                "input_commit": plan.commit_id,
+                                "input_dataset": plan.dataset,
+                                "query": qd,
+                                "pipeline": pfp,
+                                "output_dataset": output_dataset,
+                                "output_commit": res.output_commit,
+                                "content": res.content_digest,
+                                "prov": prov_digest,
+                                "prov_bytes": prov_bytes,
+                                "n_inputs": res.n_inputs,
+                                "n_outputs": res.n_outputs,
+                                "created_at": time.time(),
+                            })
+                break
+            except CommitConflictError as err:
+                if err.records \
+                        or attempt >= DatasetManager._REBASE_MAX_RETRIES:
+                    raise
+                attempt += 1
+                store.stats.commit_rebases += 1
+                time.sleep(random.uniform(0.0, min(
+                    DatasetManager._REBASE_BACKOFF_CAP_S,
+                    DatasetManager._REBASE_BACKOFF_S * (2 ** (attempt - 1)))))
+        # Listeners fire only after the whole publish landed, so a
+        # triggered workflow's own check_ins build on fully-landed state
+        # (head, lineage, and cache slot all visible).
+        self.dm.notify_commit(output_dataset, commit)
         return res
 
     # ------------------------------------------------------------------ pieces

@@ -92,7 +92,8 @@ from abc import ABC, abstractmethod
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple, Union
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Set, Tuple, Union)
 
 __all__ = [
     "StorageBackend",
@@ -104,6 +105,7 @@ __all__ = [
     "DiskChunkTier",
     "IntegrityError",
     "NotFoundError",
+    "CommitConflictError",
 ]
 
 DEFAULT_CHUNK_SIZE = 4 * 1024 * 1024
@@ -120,6 +122,45 @@ class IntegrityError(RuntimeError):
 
 class NotFoundError(KeyError):
     """Requested object is not in the store."""
+
+
+class CommitConflictError(RuntimeError):
+    """A compare-and-swap on a mutable meta key lost to a concurrent writer.
+
+    Raised when a key escalated to strict CAS semantics (see
+    :meth:`ObjectStore.require_meta_cas`) observes a concurrent change, or
+    when the last-writer-wins retry loop exhausts its cap — callers can
+    tell contention apart from corruption and react (rebase, surface to
+    the user) instead of seeing an undifferentiated failure.
+
+    Attributes carry everything a caller needs to act: the ``ref`` name,
+    the value this writer ``expected`` vs what is ``current`` in the
+    backend (decoded JSON where possible, raw bytes otherwise), the CAS
+    ``attempts`` made, and — when raised from the commit layer in
+    ``on_conflict="error"`` mode — the ``dataset`` and the overlapping
+    ``records`` that made an automatic rebase unsafe.
+    """
+
+    def __init__(self, ref: str, expected=None, current=None,
+                 attempts: int = 1, dataset: Optional[str] = None,
+                 records: Sequence[str] = ()):
+        self.ref = ref
+        self.expected = expected
+        self.current = current
+        self.attempts = attempts
+        self.dataset = dataset
+        self.records = list(records)
+        detail = f"commit conflict on {ref!r}"
+        if dataset:
+            detail += f" (dataset {dataset!r})"
+        detail += (f": expected {expected!r}, found {current!r} after "
+                   f"{attempts} attempt(s)")
+        if self.records:
+            shown = ", ".join(self.records[:8])
+            if len(self.records) > 8:
+                shown += f" (+{len(self.records) - 8} more)"
+            detail += f"; conflicting records: {shown}"
+        super().__init__(detail)
 
 
 def sha256_hex(data: bytes) -> str:
@@ -384,30 +425,113 @@ class FileBackend(StorageBackend):
 
     _LOCK_STALE_S = 10.0
 
+    def _lock_path(self, key: str) -> str:
+        lock_dir = os.path.join(self.root, "__locks__")
+        os.makedirs(lock_dir, exist_ok=True)
+        return os.path.join(lock_dir, self._encode_key(key))
+
+    @staticmethod
+    def _lock_payload() -> bytes:
+        # ``pid:monotonic`` — liveness is checked against the pid, age
+        # against CLOCK_MONOTONIC (system-wide on Linux, so stamps compare
+        # across the processes sharing this filesystem, and immune to
+        # wall-clock jumps).
+        return f"{os.getpid()}:{time.monotonic():.6f}".encode()
+
+    def _lock_is_stale(self, lock: str) -> bool:
+        """True only when the holder is *provably* dead or the lock has
+        outlived the deadline — never merely because it looks old while
+        its holder still runs."""
+        try:
+            with open(lock, "rb") as f:
+                payload = f.read()
+        except OSError:
+            return False        # released meanwhile — nothing to break
+        try:
+            pid_s, ts_s = payload.decode().split(":", 1)
+            pid, ts = int(pid_s), float(ts_s)
+        except (ValueError, UnicodeDecodeError):
+            # Unparseable (legacy empty lock, torn write): only the
+            # wall-clock mtime age is available.
+            try:
+                return (time.time() - os.path.getmtime(lock)
+                        > self._LOCK_STALE_S)
+            except OSError:
+                return False
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return True         # holder is provably dead (crash, SIGKILL)
+        except OSError:
+            pass                # alive but other-owned, or unknown: keep it
+        now = time.monotonic()
+        if ts > now:
+            # Stamp from a previous boot (monotonic restarted): fall back
+            # to wall-clock age rather than waiting forever.
+            try:
+                return (time.time() - os.path.getmtime(lock)
+                        > self._LOCK_STALE_S)
+            except OSError:
+                return False
+        return now - ts > self._LOCK_STALE_S
+
+    def _break_lock(self, lock: str) -> None:
+        """Break one stale lock, serialized through an O_EXCL guard file so
+        two waiters can never double-unlink (the second unlink could
+        otherwise destroy a lock a third writer just re-acquired)."""
+        guard = lock + ".__break__"
+        try:
+            fd = os.open(guard, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            # Another waiter is breaking it.  If *they* died mid-break the
+            # guard itself ages out exactly like a lock.
+            if self._lock_is_stale(guard):
+                try:
+                    os.unlink(guard)
+                except OSError:
+                    pass
+            return
+        try:
+            try:
+                os.write(fd, self._lock_payload())
+            finally:
+                os.close(fd)
+            if self._lock_is_stale(lock):   # re-check under the guard
+                try:
+                    os.unlink(lock)
+                except OSError:
+                    pass
+        finally:
+            try:
+                os.unlink(guard)
+            except OSError:
+                pass
+
     def put_if(self, key: str, expected: Optional[bytes],
                data: bytes) -> bool:
         # Atomic across processes sharing one filesystem: writers serialize
         # on an O_CREAT|O_EXCL lock file in a dedicated ``__locks__`` dir
-        # (outside the two-level fan-out, so listings never see it).  A
-        # lock left behind by a crashed writer is broken after 10 s.
+        # (outside the two-level fan-out, so listings never see it).  The
+        # lock records ``pid:monotonic``, so a lock left behind by a
+        # crashed writer is broken as soon as its holder is provably dead
+        # — a SIGKILLed holder never blocks the next writer for long —
+        # and a live-but-stuck holder is broken after 10 s.
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        lock_dir = os.path.join(self.root, "__locks__")
-        os.makedirs(lock_dir, exist_ok=True)
-        lock = os.path.join(lock_dir, self._encode_key(key))
+        lock = self._lock_path(key)
         deadline = time.monotonic() + 2 * self._LOCK_STALE_S
         while True:
             try:
-                os.close(os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY))
+                fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                try:
+                    os.write(fd, self._lock_payload())
+                finally:
+                    os.close(fd)
                 break
             except FileExistsError:
-                try:
-                    if time.time() - os.path.getmtime(lock) \
-                            > self._LOCK_STALE_S:
-                        os.unlink(lock)
-                        continue
-                except OSError:
-                    continue        # holder released between stat and unlink
+                if self._lock_is_stale(lock):
+                    self._break_lock(lock)
+                    continue
                 if time.monotonic() > deadline:
                     raise TimeoutError(f"put_if lock on {key!r} stuck")
                 time.sleep(0.01)
@@ -518,6 +642,10 @@ class StoreStats:
     meta_requests: int = 0
     meta_batched: int = 0
     ref_cas_retries: int = 0
+    # Optimistic multi-writer commits: how many times a lost head CAS was
+    # resolved by rebasing the loser's delta onto the new head (each rebase
+    # is one extra commit attempt, not a lost update).
+    commit_rebases: int = 0
 
 
 DEFAULT_CACHE_BYTES = 64 * 1024 * 1024
@@ -719,6 +847,16 @@ class ObjectStore:
         self._pending_lock = threading.Lock()
         self._pending_chunks: Dict[str, Tuple[bytes, int]] = {}
         self._pending_manifests: Dict[str, Tuple[bytes, int]] = {}
+        # Crash-consistency kill points (tests/harnesses only): when set,
+        # called with a string naming the flush stage about to run (e.g.
+        # ``"flush:pre_ref:refs/ds/heads/main"``); a hook that raises
+        # simulates a crash at exactly that boundary.
+        self.killpoint_hook = None
+
+    def _killpoint(self, point: str) -> None:
+        hook = self.killpoint_hook
+        if hook is not None:
+            hook(point)
 
     # -- verified-once chunk cache -----------------------------------------
 
@@ -805,6 +943,25 @@ class ObjectStore:
         if not self.meta_batching:
             return None
         return getattr(self._batch_tls, "batch", None)
+
+    def require_meta_cas(self, name: str, merge: Optional[Callable] = None,
+                         after_refs: bool = False) -> None:
+        """Escalate a staged meta key to *strict* CAS semantics for the
+        current batch: at flush it goes through the ``put_if`` guard.  On
+        a concurrent change, a key with a ``merge`` callback self-heals —
+        ``merge(current_value)`` re-applies this batch's mutation onto the
+        winner's value (append-shaped indexes: zero lost updates, never
+        aborts) — while a key without one raises
+        :class:`CommitConflictError` instead of being absorbed
+        last-writer-wins (the branch head: the rebase trigger).
+        ``after_refs=True`` additionally orders the key after every
+        ``refs/`` CAS — for pointers (like the derivation cache) that must
+        never land before the head they name.  No-op when no batch is
+        open: the caller's own read-modify-write semantics apply unbatched.
+        """
+        batch = self._active_batch()
+        if batch is not None:
+            batch.require_cas(name, merge=merge, after_refs=after_refs)
 
     # Staged-but-unflushed chunk/manifest bytes, refcounted per open batch
     # so two concurrent batches staging the same digest both stay readable.
@@ -1406,6 +1563,16 @@ class ObjectStore:
 _UNOBSERVED = object()
 
 
+def _decode_meta(raw):
+    """Best-effort decode of a raw meta value for error reporting."""
+    if raw is None or raw is _UNOBSERVED:
+        return None
+    try:
+        return json.loads(raw.decode())
+    except (ValueError, UnicodeDecodeError, AttributeError):
+        return raw
+
+
 class MetaBatch:
     """Commit-scoped grouping layer over ``meta/`` (and the commit's
     content-addressed writes).  Obtain via :meth:`ObjectStore.meta_batch`.
@@ -1447,6 +1614,15 @@ class MetaBatch:
         self._staged: "OrderedDict[str, bytes]" = OrderedDict()
         self._staged_refs: "OrderedDict[str, bytes]" = OrderedDict()
         self._expected: Dict[str, object] = {}
+        # Keys escalated to strict CAS (conflict ⇒ CommitConflictError,
+        # never last-writer-wins) and the subset that must land AFTER the
+        # refs/ pass (pointers that must never precede the head they name).
+        self._strict: Set[str] = set()
+        self._cas_after: Set[str] = set()
+        # Registered conflict-merge callbacks: on a lost CAS the key's
+        # mutation is re-applied onto the winner's value instead of
+        # clobbering it (append-shaped indexes) or aborting (the head).
+        self._merge: Dict[str, Callable] = {}
         self._chunks: "OrderedDict[str, None]" = OrderedDict()
         self._manifests: "OrderedDict[str, None]" = OrderedDict()
         self._chunk_stages = 0      # occurrences, for dedup accounting
@@ -1506,7 +1682,7 @@ class MetaBatch:
     def stage_meta(self, name: str, data: bytes) -> None:
         store = self.store
         store.stats.meta_batched += 1
-        if name.startswith(self._REFS):
+        if name.startswith(self._REFS) or name in self._strict:
             if name not in self._expected:
                 # CAS pre-image: what this scope observed (absence included);
                 # never-observed refs get one grouped read at flush time.
@@ -1515,11 +1691,30 @@ class MetaBatch:
         else:
             self._staged[name] = data
 
+    def require_cas(self, name: str, merge: Optional[Callable] = None,
+                    after_refs: bool = False) -> None:
+        """See :meth:`ObjectStore.require_meta_cas`.  Safe to call before
+        or after the key was staged; a value already staged on the
+        unconditional path is promoted into the CAS pass."""
+        self._strict.add(name)
+        if merge is not None:
+            self._merge[name] = merge
+        if after_refs:
+            self._cas_after.add(name)
+        if name in self._staged:
+            data = self._staged.pop(name)
+            if name not in self._expected:
+                self._expected[name] = self._cache.get(name, _UNOBSERVED)
+            self._staged_refs[name] = data
+
     def forget(self, name: str) -> None:
         """A write-through delete ran: drop staged state, remember absence."""
         self._staged.pop(name, None)
         self._staged_refs.pop(name, None)
         self._expected.pop(name, None)
+        self._strict.discard(name)
+        self._cas_after.discard(name)
+        self._merge.pop(name, None)
         self._cache[name] = None
 
     def merge_listing(self, prefix: str, names: Iterable[str]) -> List[str]:
@@ -1614,15 +1809,26 @@ class MetaBatch:
 
     def _flush(self) -> None:
         store = self.store
+        store._killpoint("flush:pre_blobs")
         # 1. Data blobs land first — meta must never name missing content.
         self._flush_blobs()
+        store._killpoint("flush:post_blobs")
         # 2. Write-once + non-ref mutable keys: ONE grouped unconditional
         #    put (same lost-update semantics those keys have unbatched).
         if self._staged:
             store.stats.meta_requests += 1
             store.backend.put_many(
                 [(store.META + n, raw) for n, raw in self._staged.items()])
-        # 3. Mutable refs flush LAST through the CAS guard.
+        store._killpoint("flush:post_meta")
+        # 3. The CAS pass.  Never-observed pre-images resolve with one
+        #    grouped read first; observed pre-images are deliberately NOT
+        #    refreshed — a stale one is exactly how an interleaved writer
+        #    shows up as a counted ``ref_cas_retries`` conflict.  Order:
+        #    strict non-ref keys (commit/record indexes — GC roots, so
+        #    they must land before anything points at them) → mutable
+        #    ``refs/`` → after-ref pointers (e.g. the derivation cache
+        #    slot, which must never precede the head it names).  Stable
+        #    within each group (insertion order).
         unknown = [n for n in self._staged_refs
                    if self._expected.get(n, _UNOBSERVED) is _UNOBSERVED]
         if unknown:
@@ -1630,13 +1836,26 @@ class MetaBatch:
             for name, raw in zip(unknown, store.backend.get_many(
                     [store.META + n for n in unknown])):
                 self._expected[name] = raw
-        for name, data in self._staged_refs.items():
-            self._cas_put(name, self._expected[name], data)
+        order = sorted((n for n in self._staged_refs
+                        if n not in self._cas_after),
+                       key=lambda n: n.startswith(self._REFS))
+        order.extend(n for n in self._staged_refs if n in self._cas_after)
+        for name in order:
+            store._killpoint(f"flush:pre_ref:{name}")
+            self._cas_put(name, self._expected[name], self._staged_refs[name])
+            store._killpoint(f"flush:post_ref:{name}")
+        store._killpoint("flush:post_refs")
 
     def _cas_put(self, name: str, expected, data: bytes) -> None:
         store = self.store
         key = store.META + name
+        strict = name in self._strict
+        merge = self._merge.get(name)
+        first_expected = expected
+        current = None
+        attempts = 0
         for _ in range(self._CAS_MAX_RETRIES + 1):
+            attempts += 1
             store.stats.meta_requests += 1
             if store.backend.put_if(key, expected, data):
                 return
@@ -1647,10 +1866,22 @@ class MetaBatch:
                 # response was lost, or an identical concurrent write.
                 return
             store.stats.ref_cas_retries += 1
+            if merge is not None:
+                # Conflict self-heals: re-apply this batch's mutation onto
+                # the winner's value (the key's registered merge) instead
+                # of clobbering it or aborting — zero lost updates on
+                # append-shaped keys.
+                data = store._meta_bytes(merge(_decode_meta(current)))
+                expected = current
+                continue
+            if strict:
+                raise CommitConflictError(
+                    name, expected=_decode_meta(expected),
+                    current=_decode_meta(current), attempts=attempts)
             expected = current      # last-writer-wins, now with a re-read
-        raise RuntimeError(
-            f"ref {name!r}: compare-and-swap did not converge after "
-            f"{self._CAS_MAX_RETRIES} retries")
+        raise CommitConflictError(
+            name, expected=_decode_meta(first_expected),
+            current=_decode_meta(current), attempts=attempts)
 
     def _discard(self) -> None:
         self.store._pending_release(self._chunks, self._manifests)
@@ -1662,3 +1893,6 @@ class MetaBatch:
         self._staged_refs.clear()
         self._cache.clear()
         self._expected.clear()
+        self._strict.clear()
+        self._cas_after.clear()
+        self._merge.clear()

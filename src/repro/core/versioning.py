@@ -789,11 +789,20 @@ class VersionStore:
         commit = Commit.from_json(ref.digest, body)
         self._cache_put(self._commit_cache, ref.digest, commit,
                         self._COMMIT_CACHE_CAP)
-        # Index commit ids per dataset for listing/GC roots.
-        idx = self.store.get_meta(f"commits/{dataset}", default=[])
+        # Index commit ids per dataset for listing/GC roots.  The index is
+        # a GC root source, so a lost update here could strand a live
+        # commit — and then GC could sweep pages a head still references.
+        # Inside a batch the key goes through CAS with an append-merge:
+        # a concurrent appender's ids are kept and ours re-applied on top,
+        # so the index never loses an entry no matter who wins the race.
+        key = f"commits/{dataset}"
+        idx = self.store.get_meta(key, default=[])
         if ref.digest not in idx:
             idx.append(ref.digest)
-            self.store.put_meta(f"commits/{dataset}", idx)
+            self.store.put_meta(key, idx)
+            self.store.require_meta_cas(
+                key, merge=lambda cur, cid=ref.digest:
+                    list(cur or []) + ([] if cid in (cur or []) else [cid]))
         return commit
 
     def commit_delta(
@@ -1004,8 +1013,16 @@ class VersionStore:
 
     # -- refs -------------------------------------------------------------------
 
-    def set_branch(self, dataset: str, branch: str, commit_id: str) -> None:
-        self.store.put_meta(f"refs/{dataset}/heads/{branch}", commit_id)
+    def set_branch(self, dataset: str, branch: str, commit_id: str,
+                   strict: bool = False) -> None:
+        """Move a branch head.  ``strict=True`` (the multi-writer commit
+        path) makes a concurrent head move raise
+        :class:`~repro.core.store.CommitConflictError` at flush instead of
+        last-writer-wins — the caller rebases onto the new head."""
+        name = f"refs/{dataset}/heads/{branch}"
+        self.store.put_meta(name, commit_id)
+        if strict:
+            self.store.require_meta_cas(name)
 
     def get_branch(self, dataset: str, branch: str) -> Optional[str]:
         return self.store.get_meta(f"refs/{dataset}/heads/{branch}")

@@ -57,10 +57,20 @@ class SimulatedRemoteBackend(RemoteBackend):
         Inject :class:`TransientError` every Nth request and/or with a
         seeded probability, before (``"before"``) or after (``"after"``,
         i.e. lost response) the side effect.
+    fault_ops:
+        Restrict fault arming to specific physical operations (subset of
+        ``put / get / exists / delete / list / put_if``); empty = every
+        request is eligible (the original behaviour).  The counter
+        behind ``fault_every`` then ticks only on eligible requests, so
+        e.g. ``fault_ops=("put_if",), fault_mode="after"`` deterministically
+        loses every Nth conditional-write *response* — the CAS replay
+        case the multi-writer commit path must absorb.
     grouped:
         ``False`` degrades grouped capabilities to sequential loops —
         the naive baseline for benchmarks.
     """
+
+    _FAULT_OPS = ("put", "get", "exists", "delete", "list", "put_if")
 
     def __init__(
         self,
@@ -73,6 +83,7 @@ class SimulatedRemoteBackend(RemoteBackend):
         fault_every: int = 0,
         fault_rate: float = 0.0,
         fault_mode: str = "before",
+        fault_ops: Sequence[str] = (),
         seed: int = 0,
         grouped: bool = True,
         **kwargs,
@@ -80,6 +91,9 @@ class SimulatedRemoteBackend(RemoteBackend):
         super().__init__(**kwargs)
         if fault_mode not in ("before", "after"):
             raise ValueError("fault_mode must be 'before' or 'after'")
+        unknown = set(fault_ops) - set(self._FAULT_OPS)
+        if unknown:
+            raise ValueError(f"unknown fault_ops: {sorted(unknown)}")
         self.inner = inner
         self.rtt = rtt
         self.bandwidth = bandwidth
@@ -89,22 +103,34 @@ class SimulatedRemoteBackend(RemoteBackend):
         self.fault_every = fault_every
         self.fault_rate = fault_rate
         self.fault_mode = fault_mode
+        self.fault_ops = tuple(fault_ops)
         self.grouped = grouped
         self._rng = random.Random(seed)
         self._seq_lock = threading.Lock()
         self._seq = 0
+        # Separate tick for fault placement: with ``fault_ops`` set only
+        # eligible requests advance it, so "every Nth" means every Nth
+        # *conditional write*, not every Nth request of any kind.  With no
+        # restriction it advances in lockstep with ``_seq``, preserving
+        # the original deterministic placement.
+        self._fault_seq = 0
 
     # -- network physics ----------------------------------------------------
 
-    def _plan_request(self) -> Tuple[float, bool]:
+    def _plan_request(self, op: str) -> Tuple[float, bool]:
         """Return (extra latency beyond rtt, fault?) for the next request."""
+        eligible = not self.fault_ops or op in self.fault_ops
         with self._seq_lock:
             self._seq += 1
             seq = self._seq
             extra = self._rng.uniform(0.0, self.jitter) if self.jitter else 0.0
-            fault = bool(self.fault_every) and seq % self.fault_every == 0
-            if not fault and self.fault_rate:
-                fault = self._rng.random() < self.fault_rate
+            fault = False
+            if eligible:
+                self._fault_seq += 1
+                fault = (bool(self.fault_every)
+                         and self._fault_seq % self.fault_every == 0)
+                if not fault and self.fault_rate:
+                    fault = self._rng.random() < self.fault_rate
         if self.tail_every and seq % self.tail_every == 0:
             extra += self.tail
         return extra, fault
@@ -114,9 +140,9 @@ class SimulatedRemoteBackend(RemoteBackend):
             return 0.0
         return nbytes / self.bandwidth
 
-    def _simulate(self, op, send_bytes: int = 0):
+    def _simulate(self, op_name: str, op, send_bytes: int = 0):
         """Charge the wire cost around ``op()``; maybe inject a fault."""
-        extra, fault = self._plan_request()
+        extra, fault = self._plan_request(op_name)
         time.sleep(self.rtt + extra + self._transfer(send_bytes))
         if fault and self.fault_mode == "before":
             raise TransientError("injected fault (request dropped)")
@@ -130,7 +156,8 @@ class SimulatedRemoteBackend(RemoteBackend):
     # -- raw primitives -----------------------------------------------------
 
     def _raw_put(self, key: str, data: bytes) -> None:
-        self._simulate(lambda: self.inner.put(key, data), send_bytes=len(data))
+        self._simulate("put", lambda: self.inner.put(key, data),
+                       send_bytes=len(data))
 
     def _raw_get(self, key: str) -> Optional[bytes]:
         def op() -> Optional[bytes]:
@@ -138,10 +165,10 @@ class SimulatedRemoteBackend(RemoteBackend):
                 return self.inner.get(key)
             except NotFoundError:
                 return None
-        return self._simulate(op)
+        return self._simulate("get", op)
 
     def _raw_exists(self, key: str) -> bool:
-        return self._simulate(lambda: self.inner.exists(key))
+        return self._simulate("exists", lambda: self.inner.exists(key))
 
     def _raw_delete(self, key: str) -> None:
         def op() -> None:
@@ -149,10 +176,11 @@ class SimulatedRemoteBackend(RemoteBackend):
                 self.inner.delete(key)
             except NotFoundError:
                 pass  # absence-tolerant, like every real object store
-        self._simulate(op)
+        self._simulate("delete", op)
 
     def _raw_list_keys(self, prefix: str = "") -> List[str]:
-        return self._simulate(lambda: list(self.inner.list_keys(prefix)))
+        return self._simulate("list",
+                              lambda: list(self.inner.list_keys(prefix)))
 
     def _raw_put_if(self, key: str, expected: Optional[bytes],
                     data: bytes) -> bool:
@@ -160,7 +188,8 @@ class SimulatedRemoteBackend(RemoteBackend):
         # backend (one physical request), so a "response lost" fault
         # leaves the swap applied — exactly the replay case the store's
         # CAS loop must absorb.
-        return self._simulate(lambda: self.inner.put_if(key, expected, data),
+        return self._simulate("put_if",
+                              lambda: self.inner.put_if(key, expected, data),
                               send_bytes=len(data))
 
     # -- naive-mode degradation --------------------------------------------

@@ -1,0 +1,320 @@
+"""Crash consistency: kill points, lock-file recovery, idempotent close.
+
+A writer can die at ANY point inside a commit flush.  The flush order
+(data blobs → write-once meta → CAS'd indexes → refs) plus the lock
+protocol must guarantee that whatever survives is safe: the head never
+names missing state, the GC-root commit index always covers the live
+history, a derivation cache slot never precedes the output head it
+names, a SIGKILLed lock holder never wedges the repository, and
+``Platform.close()`` flushes buffered segments exactly once no matter
+how many times (or through which exit path) it runs.
+
+Kills are simulated with ``ObjectStore.killpoint_hook``: a hook that
+raises at a chosen flush point aborts the process mid-commit exactly
+where a real crash would.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (DatasetManager, FileBackend, MemoryBackend,
+                        ObjectStore, Pipeline, Record, component)
+from repro.core.derive import DerivationCache
+from repro.core.lineage import NodeKind
+from repro.platform import Platform
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+class Boom(Exception):
+    """The simulated crash."""
+
+
+def recs(ids, salt=""):
+    return [Record(r, f"payload {salt}{r}".encode() * 4, {"s": salt})
+            for r in ids]
+
+
+def kill_at(store, point):
+    def hook(p):
+        if p == point:
+            raise Boom(point)
+    store.killpoint_hook = hook
+
+
+def record_killpoints(store):
+    seen = []
+    store.killpoint_hook = seen.append
+    return seen
+
+
+# ---------------------------------------------------------------- kill matrix
+
+
+def test_killpoints_fire_in_flush_order():
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    dm.check_in("ds", recs(["r0"]), actor="w")
+    seen = record_killpoints(dm.store)
+    dm.check_in("ds", recs(["r1"]), actor="w")
+    dm.store.killpoint_hook = None
+
+    assert seen[0] == "flush:pre_blobs"
+    assert seen[-1] == "flush:post_refs"
+    assert seen.index("flush:post_blobs") < seen.index("flush:post_meta")
+    # CAS order: GC-root indexes strictly before the branch ref
+    head = seen.index("flush:pre_ref:refs/ds/heads/main")
+    assert seen.index("flush:pre_ref:commits/ds") < head
+    assert seen.index("flush:pre_ref:recindex/ds") < head
+
+
+def _cold_verify(root):
+    """Re-open the repo cold; the head must never name missing state."""
+    dm = DatasetManager(ObjectStore(FileBackend(root)))
+    head = dm.versions.get_branch("ds", "main")
+    assert head is not None
+    chain, cur = [], head
+    while cur:
+        c = dm.versions.get_commit(cur)          # raises if the ref dangles
+        chain.append(c.commit_id)
+        assert len(c.parents) <= 1, "history must stay linear"
+        cur = c.parents[0] if c.parents else None
+    indexed = set(dm.versions.list_commits("ds"))
+    assert set(chain) <= indexed, "live commit stranded from the GC roots"
+    snap = dm.checkout("ds", actor="verify", register_snapshot=False)
+    for rid in snap.record_ids():
+        assert snap.read(rid)                     # every page + blob loads
+    return dm, set(snap.record_ids())
+
+
+def test_crash_at_every_flush_point_recovers(tmp_path):
+    """Kill a FileBackend check_in at each flush point; after a cold
+    reopen the repo is consistent and a retry converges."""
+    probe = DatasetManager(ObjectStore(MemoryBackend()))
+    probe.check_in("ds", recs(["a0"]), actor="w")
+    seen = record_killpoints(probe.store)
+    probe.check_in("ds", recs(["b0"]), actor="w")
+    probe.store.killpoint_hook = None
+    assert len(seen) >= 8
+
+    for i, point in enumerate(seen):
+        root = str(tmp_path / f"repo{i}")
+        dm = DatasetManager(ObjectStore(FileBackend(root)))
+        dm.check_in("ds", recs(["a0"]), actor="w")
+        kill_at(dm.store, point)
+        with pytest.raises(Boom):
+            dm.check_in("ds", recs(["b0"]), actor="w")
+
+        _, ids = _cold_verify(root)              # crashed state is safe
+        assert "a0" in ids                       # seed never regresses
+
+        dm2 = DatasetManager(ObjectStore(FileBackend(root)))
+        dm2.check_in("ds", recs(["b0"]), actor="w")
+        _, ids = _cold_verify(root)              # retry converges
+        assert ids == {"a0", "b0"}
+
+
+def test_derive_publish_is_atomic_at_every_kill_point():
+    """The transactional derive publish: at every kill point, a cache
+    slot that names a commit implies the output head already landed —
+    never the reverse."""
+
+    @component(kind="map", name="mark")
+    def mark(rec):
+        return Record(rec.record_id, rec.data + b"!", dict(rec.attrs))
+
+    pipe = Pipeline([mark], name="marker")
+
+    def slot_head_invariant(store):
+        cache = DerivationCache(store)           # cold read, no memo
+        for entry in cache.entries().values():
+            if entry.get("output_dataset") == "out":
+                head = store.get_meta("refs/out/heads/main")
+                assert head == entry["output_commit"], \
+                    "cache slot landed without (or before) its head"
+
+    points = ("flush:pre_ref:refs/out/heads/main",
+              "flush:post_ref:refs/out/heads/main",
+              "flush:pre_ref:derive/cache",
+              "flush:post_refs")
+    for point in points:
+        p = Platform.open(actor="d")
+        p.dataset("in").check_in(recs(["i0", "i1"]), message="seed")
+        kill_at(p.store, point)
+        with pytest.raises(Boom):
+            p.dataset("in").derive(pipe, output="out")
+        p.store.killpoint_hook = None
+        slot_head_invariant(p.store)
+
+        if point == "flush:pre_ref:refs/out/heads/main":
+            assert p.store.get_meta("refs/out/heads/main") is None
+        else:
+            assert p.store.get_meta("refs/out/heads/main") is not None
+        if point != "flush:post_refs":
+            assert DerivationCache(p.store).entries() == {}
+
+        # recovery: the same derivation re-runs and republished cleanly
+        res = p.dataset("in").derive(pipe, output="out")
+        slot_head_invariant(p.store)
+        assert p.store.get_meta("refs/out/heads/main") == res.output_commit
+        snap = p.dataset("out").checkout(register_snapshot=False)
+        assert set(snap.record_ids()) == {"i0", "i1"}
+
+
+# ------------------------------------------------------------------ lock files
+
+
+def test_sigkilled_lock_holder_never_blocks_next_writer(tmp_path):
+    """Satellite contract: a SIGKILLed put_if holder is detected as
+    provably dead (pid liveness) and broken immediately — the next
+    writer proceeds long before the 10 s deadline."""
+    root = str(tmp_path)
+    be = FileBackend(root)
+    key = "meta/refs/ds/heads/main"
+    child = subprocess.Popen(
+        [sys.executable, "-c", textwrap.dedent(f"""
+            import os, sys, time
+            sys.path.insert(0, {SRC!r})
+            from repro.core.store import FileBackend
+            be = FileBackend({root!r})
+            lock = be._lock_path({key!r})
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            os.write(fd, be._lock_payload())
+            os.close(fd)
+            print("held", flush=True)
+            time.sleep(600)
+        """)], stdout=subprocess.PIPE, text=True)
+    try:
+        assert child.stdout.readline().strip() == "held"
+        os.kill(child.pid, signal.SIGKILL)
+        child.wait(timeout=30)
+        t0 = time.monotonic()
+        assert be.put_if(key, None, b'"c1"') is True
+        assert time.monotonic() - t0 < be._LOCK_STALE_S / 2
+        assert be.get(key) == b'"c1"'
+    finally:
+        if child.poll() is None:
+            child.kill()
+
+
+def test_live_holder_lock_is_not_broken(tmp_path):
+    be = FileBackend(str(tmp_path))
+    lock = be._lock_path("meta/refs/ds/heads/main")
+    with open(lock, "wb") as f:
+        f.write(be._lock_payload())              # our own live pid, fresh
+    assert be._lock_is_stale(lock) is False
+
+
+def test_dead_holder_lock_is_stale_immediately(tmp_path):
+    be = FileBackend(str(tmp_path))
+    lock = be._lock_path("meta/refs/ds/heads/main")
+    child = subprocess.Popen([sys.executable, "-c", "pass"])
+    child.wait()
+    with open(lock, "wb") as f:
+        f.write(f"{child.pid}:{time.monotonic():.6f}".encode())
+    assert be._lock_is_stale(lock) is True
+
+
+def test_garbage_lock_breaks_on_mtime_age(tmp_path):
+    """Unparseable lock content (legacy/torn write): only wall-clock age
+    applies — old garbage is broken, fresh garbage is kept."""
+    be = FileBackend(str(tmp_path))
+    lock = be._lock_path("meta/refs/ds/heads/main")
+    with open(lock, "wb") as f:
+        f.write(b"not a pid stamp")
+    assert be._lock_is_stale(lock) is False      # fresh: keep
+    old = time.time() - 4 * be._LOCK_STALE_S
+    os.utime(lock, (old, old))
+    assert be._lock_is_stale(lock) is True       # aged out: break
+    t0 = time.monotonic()
+    assert be.put_if("meta/refs/ds/heads/main", None, b'"c1"') is True
+    assert time.monotonic() - t0 < be._LOCK_STALE_S / 2
+
+
+def test_stuck_live_holder_breaks_after_deadline(tmp_path, monkeypatch):
+    monkeypatch.setattr(FileBackend, "_LOCK_STALE_S", 0.2)
+    be = FileBackend(str(tmp_path))
+    lock = be._lock_path("meta/refs/ds/heads/main")
+    with open(lock, "wb") as f:
+        f.write(be._lock_payload())              # live holder (us)...
+    t0 = time.monotonic()
+    assert be.put_if("meta/refs/ds/heads/main", None, b'"c1"') is True
+    waited = time.monotonic() - t0
+    assert waited >= 0.15                        # ...held until the deadline
+    assert waited < 2.0
+
+
+def test_concurrent_put_if_with_sigkilled_holder_subprocess(tmp_path):
+    """End to end: a worker dies mid-commit (SIGKILL while its head lock
+    is held); a second session's commit still lands."""
+    root = str(tmp_path / "repo")
+    dm = DatasetManager(ObjectStore(FileBackend(root)))
+    dm.check_in("ds", recs(["a0"]), actor="w")
+    # dead holder's lock left behind on the head ref
+    be = FileBackend(root)
+    lock = be._lock_path("meta/refs/ds/heads/main")
+    child = subprocess.Popen([sys.executable, "-c", "pass"])
+    child.wait()
+    with open(lock, "wb") as f:
+        f.write(f"{child.pid}:{time.monotonic():.6f}".encode())
+
+    dm2 = DatasetManager(ObjectStore(FileBackend(root)))
+    t0 = time.monotonic()
+    dm2.check_in("ds", recs(["b0"]), actor="w")
+    assert time.monotonic() - t0 < FileBackend._LOCK_STALE_S / 2
+    snap = dm2.checkout("ds", actor="w", register_snapshot=False)
+    assert set(snap.record_ids()) == {"a0", "b0"}
+
+
+# ------------------------------------------------------------- close() contract
+
+
+def _seg_counts(store):
+    return (len(store.list_meta("audit/seg/")),
+            len(store.list_meta("lineage/seg/")))
+
+
+def test_close_flushes_buffered_segments_exactly_once():
+    p = Platform.open(actor="a")
+    p.dataset("ds").check_in(recs(["r0"]), message="seed")
+    base = _seg_counts(p.store)
+    # buffer an audit event (checkout ACL check) and a lineage node
+    p.dataset("ds").checkout(register_snapshot=False)
+    p.lineage.add_node("note:close-test", NodeKind.SNAPSHOT, dataset="ds")
+    assert _seg_counts(p.store) == base          # still buffered
+
+    p.close()
+    after_first = _seg_counts(p.store)
+    assert after_first[0] == base[0] + 1
+    assert after_first[1] == base[1] + 1
+    n_audit = len(p.audit_log())
+
+    p.close()                                    # double close: no-op
+    p.close()
+    assert _seg_counts(p.store) == after_first
+    assert len(p.audit_log()) == n_audit
+
+
+def test_context_manager_exit_flushes_once_even_after_exception():
+    store = ObjectStore(MemoryBackend())
+    with pytest.raises(RuntimeError):
+        with Platform.open(store, actor="a") as p:
+            p.dataset("ds").check_in(recs(["r0"]), message="seed")
+            p.dataset("ds").checkout(register_snapshot=False)
+            raise RuntimeError("body explodes")
+    counts = _seg_counts(store)
+    # the buffered READ audit event landed on exit...
+    events = [e for e in Platform.open(store, actor="x").audit_log()
+              if e.get("action") == "READ"]
+    assert events
+    # ...and a second close on the SAME platform adds nothing
+    p.close()
+    assert _seg_counts(store) == counts

@@ -1,0 +1,362 @@
+"""Concurrent multi-writer commits: optimistic page-level rebase.
+
+Two (or more) writers race one branch head through the strict CAS +
+rebase path.  Interleavings are made deterministic with the store's
+kill-point hook: a rival's commit is injected at an exact point inside
+the victim's flush, so every test pins one conflict shape — disjoint
+pages merging silently, overlapping records resolving last-writer-wins
+or raising in ``on_conflict="error"`` mode, lost CAS responses replaying
+without a rebase, and the bounded retry loop giving up with a typed
+error that names what conflicted.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core import (CommitConflictError, DatasetManager, MemoryBackend,
+                        ObjectStore, Record)
+from repro.store.remote import SimulatedRemoteBackend
+
+SCRIPTS = Path(__file__).resolve().parent.parent / "scripts"
+
+
+def recs(ids, salt=""):
+    return [Record(r, f"payload {salt}{r}".encode() * 4, {"s": salt})
+            for r in ids]
+
+
+def two_writers():
+    """Two DatasetManagers over ONE backend — two sessions, one repo."""
+    be = MemoryBackend()
+    a = DatasetManager(ObjectStore(be))
+    b = DatasetManager(ObjectStore(be))
+    return a, b
+
+
+def interleave(victim: DatasetManager, point: str, rival_commit):
+    """Arrange ``rival_commit()`` to run exactly once when the victim's
+    flush reaches ``point`` — a deterministic interleaved writer."""
+    fired = []
+
+    def hook(p):
+        if p == point and not fired:
+            fired.append(p)
+            rival_commit()
+
+    victim.store.killpoint_hook = hook
+    return fired
+
+
+def first_parent_chain(dm, dataset="ds", branch="main"):
+    cur = dm.versions.get_branch(dataset, branch)
+    out = []
+    while cur is not None:
+        c = dm.versions.get_commit(cur)
+        out.append(c)
+        assert len(c.parents) <= 1, "history must stay linear"
+        cur = c.parents[0] if c.parents else None
+    return out
+
+
+# ---------------------------------------------------------------- rebase
+
+
+def test_disjoint_writers_rebase_and_merge():
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    fired = interleave(
+        a, "flush:pre_ref:refs/ds/heads/main",
+        lambda: b.check_in("ds", recs(["b0"]), actor="b"))
+    a.check_in("ds", recs(["a1"]), actor="a")
+    a.store.killpoint_hook = None
+    assert fired, "the rival never ran — interleave point missed"
+
+    assert a.store.stats.commit_rebases == 1
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert set(snap.record_ids()) == {"a0", "a1", "b0"}
+    chain = first_parent_chain(a)
+    assert len(chain) == 3
+    # the loser's commit sits ON TOP of the winner's
+    assert chain[0].author == "a" and chain[1].author == "b"
+
+
+def test_rebase_at_earliest_killpoint_too():
+    """A rival that lands before ANY of our flush work still rebases."""
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    interleave(a, "flush:pre_blobs",
+               lambda: b.check_in("ds", recs(["b0"]), actor="b"))
+    a.check_in("ds", recs(["a1"]), actor="a")
+    a.store.killpoint_hook = None
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert set(snap.record_ids()) == {"a0", "a1", "b0"}
+    assert a.store.stats.commit_rebases == 1
+
+
+def test_rebase_keeps_commit_and_record_indexes_exact():
+    """The aborted attempt's commit id must NOT linger in the GC-root
+    commit index or the revocation record index."""
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["b0"]), actor="b"))
+    a.check_in("ds", recs(["a1"]), actor="a")
+    a.store.killpoint_hook = None
+
+    chain_ids = {c.commit_id for c in first_parent_chain(a)}
+    indexed = set(a.versions.list_commits("ds"))
+    assert indexed == chain_ids, "index must be exactly the live history"
+    ridx = a.store.get_meta("recindex/ds")
+    for rid, cids in ridx["added"].items():
+        assert set(cids) <= chain_ids, f"{rid} indexed under a dead commit"
+
+
+def test_disjoint_records_merge_even_in_error_mode():
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["b0"]), actor="b"))
+    a.check_in("ds", recs(["a1"]), actor="a", on_conflict="error")
+    a.store.killpoint_hook = None
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert set(snap.record_ids()) == {"a0", "a1", "b0"}
+
+
+def test_overlapping_record_lww_by_default():
+    a, b = two_writers()
+    a.check_in("ds", recs(["base"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["hot"], salt="THEIRS"),
+                                  actor="b"))
+    a.check_in("ds", recs(["hot"], salt="OURS"), actor="a")
+    a.store.killpoint_hook = None
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    # the rebased loser replays on top: per-record last-writer-wins
+    assert snap.read("hot") == b"payload OURShot" * 4
+
+
+def test_overlapping_record_error_mode_raises_typed():
+    a, b = two_writers()
+    a.check_in("ds", recs(["base"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["hot"], salt="THEIRS"),
+                                  actor="b"))
+    with pytest.raises(CommitConflictError) as ei:
+        a.check_in("ds", recs(["hot"], salt="OURS"), actor="a",
+                   on_conflict="error")
+    a.store.killpoint_hook = None
+    err = ei.value
+    assert err.dataset == "ds"
+    assert err.ref == "refs/ds/heads/main"
+    assert "hot" in err.records
+    # the winner's commit survives untouched
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert snap.read("hot") == b"payload THEIRShot" * 4
+
+
+def test_remove_vs_modify_replays_the_removal():
+    a, b = two_writers()
+    a.check_in("ds", recs(["doomed", "keep"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["doomed"], salt="v2"),
+                                  actor="b"))
+    a.check_in("ds", [], actor="a", remove_ids=["doomed"])
+    a.store.killpoint_hook = None
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert set(snap.record_ids()) == {"keep"}
+
+
+def test_replace_mode_conflicts_in_error_mode():
+    """replace=True rewrites the whole manifest — ANY concurrent head
+    move is a conflict in error mode."""
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    interleave(a, "flush:pre_ref:refs/ds/heads/main",
+               lambda: b.check_in("ds", recs(["b0"]), actor="b"))
+    with pytest.raises(CommitConflictError):
+        a.check_in("ds", recs(["a0", "a1"]), actor="a", replace=True,
+                   on_conflict="error")
+    a.store.killpoint_hook = None
+
+
+# ---------------------------------------------------------- CAS replay & caps
+
+
+class AppliedButDeniedBackend(MemoryBackend):
+    """put_if APPLIES the swap but reports failure once for a chosen key
+    — the 'response lost, rival builds on top' interleaving."""
+
+    def __init__(self, deny_key, on_denied):
+        super().__init__()
+        self._deny_key = deny_key
+        self._on_denied = on_denied
+        self._fired = False
+
+    def put_if(self, key, expected, data):
+        ok = super().put_if(key, expected, data)
+        if ok and key == self._deny_key and not self._fired:
+            self._fired = True
+            self._on_denied()
+            return False
+        return ok
+
+
+def test_applied_cas_with_lost_response_is_not_junked():
+    """If our head swap applied but the response was lost AND a rival
+    built on top before we re-read, the commit is live history: it must
+    not be re-published, and it must stay in the GC-root commit index."""
+    state = {}
+
+    def rival():
+        b = DatasetManager(ObjectStore(state["be"]))
+        b.check_in("ds", recs(["b0"]), actor="b")
+
+    be = AppliedButDeniedBackend("meta/refs/ds/heads/main", rival)
+    state["be"] = be
+    a = DatasetManager(ObjectStore(be))
+    commit = a.check_in("ds", recs(["a0"]), actor="a")
+
+    chain = first_parent_chain(a)
+    assert [c.commit_id for c in chain][-1] == commit.commit_id
+    assert len(chain) == 2                     # a0 then b0 — no duplicate
+    assert set(a.versions.list_commits("ds")) == {c.commit_id
+                                                  for c in chain}
+    snap = a.checkout("ds", actor="a", register_snapshot=False)
+    assert set(snap.record_ids()) == {"a0", "b0"}
+
+
+class AlwaysLosesBackend(MemoryBackend):
+    """Every conditional write loses to a phantom rival: put_if always
+    fails and every re-read of a ref observes a fresh rival value."""
+
+    def __init__(self):
+        super().__init__()
+        self._n = 0
+
+    def put_if(self, key, expected, data):
+        return False
+
+    def get_many(self, keys):
+        out = []
+        for k in keys:
+            if k.startswith("meta/refs/"):
+                self._n += 1
+                out.append(json.dumps(f"phantom-{self._n}").encode())
+            else:
+                out.append(super().get_many([k])[0])
+        return out
+
+
+def test_cas_retry_cap_exhaustion_carries_context():
+    st = ObjectStore(AlwaysLosesBackend())
+    with pytest.raises(CommitConflictError) as ei:
+        with st.meta_batch():
+            st.put_meta("refs/ds/tags/v1", "target")
+    err = ei.value
+    assert err.ref == "refs/ds/tags/v1"
+    assert err.attempts == MetaBatchCap.expected_attempts()
+    assert err.current is not None and err.current != err.expected
+    assert "refs/ds/tags/v1" in str(err)
+
+
+class MetaBatchCap:
+    @staticmethod
+    def expected_attempts():
+        from repro.core.store import MetaBatch
+        return MetaBatch._CAS_MAX_RETRIES + 1
+
+
+def test_rebase_gives_up_after_bounded_retries():
+    a, b = two_writers()
+    a.check_in("ds", recs(["a0"]), actor="a")
+    n = DatasetManager._REBASE_MAX_RETRIES + 2
+    seq = iter(range(n))
+
+    def rival():
+        b.check_in("ds", recs([f"b{next(seq)}"]), actor="b")
+
+    def hook(p):
+        if p == "flush:pre_ref:refs/ds/heads/main":
+            rival()
+
+    a._REBASE_BACKOFF_S = 0.0  # keep the test fast
+    a.store.killpoint_hook = hook
+    with pytest.raises(CommitConflictError) as ei:
+        a.check_in("ds", recs(["a1"]), actor="a")
+    a.store.killpoint_hook = None
+    assert ei.value.ref == "refs/ds/heads/main"
+    assert a.store.stats.commit_rebases == DatasetManager._REBASE_MAX_RETRIES
+
+
+def test_lost_put_if_responses_replay_without_rebase():
+    """fault_ops=("put_if",) loses every Nth conditional-write RESPONSE;
+    a single writer must detect its own replays — zero counted retries,
+    zero rebases, linear history."""
+    be = SimulatedRemoteBackend(MemoryBackend(), rtt=0.0, fault_every=3,
+                                fault_mode="after", fault_ops=("put_if",))
+    dm = DatasetManager(ObjectStore(be))
+    for j in range(6):
+        dm.check_in("ds", recs([f"r{j}"]), actor="w")
+    assert dm.store.stats.ref_cas_retries == 0
+    assert dm.store.stats.commit_rebases == 0
+    assert len(first_parent_chain(dm)) == 6
+    snap = dm.checkout("ds", actor="w", register_snapshot=False)
+    assert set(snap.record_ids()) == {f"r{j}" for j in range(6)}
+
+
+def test_fault_ops_rejects_unknown_op():
+    with pytest.raises(ValueError):
+        SimulatedRemoteBackend(MemoryBackend(), fault_ops=("frobnicate",))
+
+
+# ---------------------------------------------------------------- stress
+
+
+def test_threaded_writers_no_lost_updates():
+    dm = DatasetManager(ObjectStore(MemoryBackend()))
+    T, M = 4, 10
+    errors = []
+
+    def writer(w):
+        try:
+            for j in range(M):
+                dm.check_in("ds", recs([f"w{w}/{j}"]), actor=f"w{w}",
+                            message=f"w{w}#{j}")
+        except BaseException as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    snap = dm.checkout("ds", actor="w0", register_snapshot=False)
+    assert set(snap.record_ids()) == {f"w{w}/{j}"
+                                      for w in range(T) for j in range(M)}
+    chain = first_parent_chain(dm)
+    assert len(chain) == T * M
+    assert set(dm.versions.list_commits("ds")) == {c.commit_id
+                                                   for c in chain}
+
+
+def test_stress_driver_subprocess(tmp_path):
+    """The process-level harness (own CLI, spawn workers, cold verify)
+    must pass a small faulted run end to end."""
+    out = tmp_path / "stress.jsonl"
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPTS / "stress_writers.py"),
+         "--procs", "2", "--commits", "4", "--fault-every", "3",
+         "--root", str(tmp_path / "repo"), "--json", str(out)],
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    result = json.loads(out.read_text().splitlines()[-1])
+    assert result["lost_updates"] == 0
+    assert result["violations"] == []
